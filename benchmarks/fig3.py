@@ -1,0 +1,40 @@
+"""Paper Fig. 3 reproduction: RTT latency vs region count for the
+offload / unload / adaptive policies (calibrated simulator + REAL policy
+code). One row per (policy, region_count) point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FIG3_CLAIMS, PAPER_WORKLOAD
+from repro.core.monitor import ExactMonitor
+from repro.core.policy import AlwaysOffload, AlwaysUnload, FrequencyPolicy, HintPolicy
+from repro.core.simulator import sweep_point
+
+N_WRITES, WARMUP = 60_000, 6_000
+REGION_COUNTS = (1, 2**6, 2**12, 2**14, 2**17, 2**20)
+
+
+def run() -> list:
+    rows = []
+    for r in REGION_COUNTS:
+        key = jax.random.key(r)
+        off, _ = sweep_point(key, r, N_WRITES, WARMUP, AlwaysOffload())
+        un, _ = sweep_point(key, r, N_WRITES, WARMUP, AlwaysUnload())
+        hot = jnp.zeros((r,), bool).at[: min(PAPER_WORKLOAD.adaptive_top_k, r)].set(True)
+        ad, _ = sweep_point(key, r, N_WRITES, WARMUP, HintPolicy(hot_regions=hot))
+        mon = ExactMonitor(n_regions=r)
+        fr, _ = sweep_point(key, r, N_WRITES, WARMUP,
+                            FrequencyPolicy(monitor=mon, threshold=3), mon)
+        rows += [
+            (f"fig3/offload/r={r}", off, "us"),
+            (f"fig3/unload/r={r}", un, "us"),
+            (f"fig3/adaptive_hint/r={r}", ad, "us"),
+            (f"fig3/adaptive_freq/r={r}", fr, "us"),
+        ]
+    # headline claims
+    off20, _ = sweep_point(jax.random.key(0), 2**20, N_WRITES, WARMUP, AlwaysOffload())
+    un20, _ = sweep_point(jax.random.key(0), 2**20, N_WRITES, WARMUP, AlwaysUnload())
+    rows.append(("fig3/improvement_at_2e20", 100 * (1 - un20 / off20), "%"))
+    rows.append(("fig3/paper_claim", 100 * FIG3_CLAIMS["improvement_at_2e20"], "%"))
+    return rows

@@ -1,0 +1,41 @@
+"""MoE dispatch path comparison: direct (offload) vs staged (unload) vs
+adaptive, as (a) CPU wall time on the reduced config and (b) compiled HLO
+FLOPs/bytes on the single-device lowering — the cost structure the paper's
+decision module trades off."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import moe as MOE
+
+
+def run() -> list:
+    cfg = get_config("granite-moe-3b-a800m").reduced()
+    p = MOE.init_moe_mlp(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (8, 128, cfg.d_model))
+    hot = jnp.zeros((cfg.n_experts,), bool).at[:2].set(True)
+    rows = []
+    for mode in ("direct", "staged", "adaptive"):
+        hk = hot if mode == "adaptive" else None
+
+        @jax.jit
+        def f(x, hk=hk, mode=mode):
+            y, aux, load = MOE.moe_ffn_layer(cfg, p, x, mode, hk)
+            return y
+
+        y = f(x)
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        for _ in range(30):
+            y = f(x)
+        jax.block_until_ready(y)
+        rows.append((f"moe/{mode}_wall_us", (time.perf_counter() - t0) / 30 * 1e6, "us"))
+
+        ca = jax.jit(f).lower(x).compile().cost_analysis()
+        rows.append((f"moe/{mode}_hlo_mflops", ca.get("flops", 0) / 1e6, "MF"))
+        rows.append((f"moe/{mode}_hlo_mbytes", ca.get("bytes accessed", 0) / 1e6, "MB"))
+    return rows

@@ -1,0 +1,50 @@
+"""Decision-module overhead: ns per request for each policy (paper §3.2
+requires answers 'faster than the expected savings' — hundreds of ns).
+Jitted, vectorized over a serving-sized request batch."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decision import DecisionModule
+from repro.core.monitor import CMSMonitor, ExactMonitor
+from repro.core.policy import AlwaysOffload, FrequencyPolicy, HintPolicy
+from repro.core.types import make_write_batch
+
+N = 256  # requests per decision batch
+
+
+def _bench(dm: DecisionModule, n_iter=200) -> float:
+    state = dm.init_state()
+    rng = np.random.RandomState(0)
+    batch = make_write_batch(jnp.asarray(rng.randint(0, 1 << 16, N), jnp.int32))
+
+    @jax.jit
+    def step(state):
+        unload, state, _ = dm(state, batch)
+        return unload, state
+
+    unload, state = step(state)
+    jax.block_until_ready(unload)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        unload, state = step(state)
+    jax.block_until_ready(unload)
+    return (time.perf_counter() - t0) / n_iter / N * 1e9
+
+
+def run() -> list:
+    exact = ExactMonitor(n_regions=1 << 16)
+    cms = CMSMonitor(depth=4, log2_width=12)
+    hot = jnp.zeros((1 << 16,), bool).at[:4096].set(True)
+    return [
+        ("policy/always_offload_ns", _bench(DecisionModule(AlwaysOffload())), "ns"),
+        ("policy/hint_ns", _bench(DecisionModule(HintPolicy(hot_regions=hot))), "ns"),
+        ("policy/freq_exact_ns",
+         _bench(DecisionModule(FrequencyPolicy(monitor=exact, threshold=4), exact)), "ns"),
+        ("policy/freq_cms_ns",
+         _bench(DecisionModule(FrequencyPolicy(monitor=cms, threshold=4), cms)), "ns"),
+    ]

@@ -1,0 +1,37 @@
+"""Serving write-mode comparison: direct vs staged vs adaptive KV writes
+through the real serve engine (reduced model, CPU wall time per decode
+step + path statistics). The framework-level analogue of Fig. 3."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def run() -> list:
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 96)
+    prompt = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab)
+    rows = []
+    for mode in ("direct", "staged", "adaptive"):
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=96, write_mode=mode, ring_size=8, page_size=8,
+            hot_threshold=3,
+        ))
+        toks = eng.generate(prompt, 4)  # warm the jit caches
+        t0 = time.perf_counter()
+        toks = eng.generate(prompt, 24)
+        jax.block_until_ready(toks)
+        dt = (time.perf_counter() - t0) / 24 * 1e3
+        rows.append((f"serve/{mode}_ms_per_step", dt, "ms"))
+        total = eng.stats["direct_writes"] + eng.stats["staged_writes"]
+        if total:
+            rows.append((f"serve/{mode}_staged_frac",
+                         eng.stats["staged_writes"] / total, "x"))
+    return rows

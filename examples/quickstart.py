@@ -1,0 +1,61 @@
+"""Quickstart: the uRDMA bidirectional write engine in 60 seconds.
+
+Shows the paper's three pieces working together on CPU:
+  1. register destination memory in uMTT (security parity),
+  2. route a Zipfian write stream through the decision module
+     (frequency policy over heavy-hitter counters),
+  3. observe path statistics + verify the memory matches a last-write-wins
+     oracle (functional parity, regardless of which path each write took).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DecisionModule,
+    ExactMonitor,
+    FrequencyPolicy,
+    RemoteWriteEngine,
+    make_umtt,
+    make_write_batch,
+    register,
+)
+
+R, W, BATCH, STEPS = 256, 32, 64, 40
+
+# -- setup: register [0, R) under stag 7 (paper: registration at setup time)
+table = register(make_umtt(64), base=0, n_regions=R, stag=7)
+
+monitor = ExactMonitor(n_regions=R)
+engine = RemoteWriteEngine(
+    decision=DecisionModule(
+        policy=FrequencyPolicy(monitor=monitor, threshold=4), monitor=monitor
+    ),
+    ring_capacity=256,
+    width=W,
+)
+state = engine.init_state(table)
+mem = jnp.zeros((R, W))
+
+# -- drive a skewed write stream (hot head, cold tail — like the paper's Zipf)
+rng = np.random.RandomState(0)
+oracle = np.zeros((R, W))
+for step in range(STEPS):
+    regions = jnp.asarray(rng.zipf(1.3, BATCH) % R, jnp.int32)
+    payload = jnp.asarray(rng.randn(BATCH, W), jnp.float32)
+    batch = make_write_batch(regions, size=jnp.full((BATCH,), W, jnp.int32))
+    state, mem = engine.write(state, mem, batch, payload,
+                              jnp.full((BATCH,), 7, jnp.int32))
+    for i in range(BATCH):
+        oracle[int(regions[i])] = payload[i]
+
+state, mem = engine.flush(state, mem)
+
+total = int(state.n_offloaded) + int(state.n_unloaded)
+print(f"writes routed:   {total}")
+print(f"  offload path:  {int(state.n_offloaded)} (hot destinations)")
+print(f"  unload path:   {int(state.n_unloaded)} (cold destinations)")
+print(f"  rejected:      {int(state.n_rejected)} (uMTT security check)")
+print(f"functional parity vs oracle: {np.allclose(np.asarray(mem), oracle)}")

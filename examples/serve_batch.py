@@ -1,0 +1,43 @@
+"""Batched serving with uRDMA KV-write routing.
+
+Prefills a batch of prompts, then decodes with each of the three write
+modes — direct (offload), staged (unload: ring + bulk drain), adaptive
+(page-frequency policy) — verifying all three emit IDENTICAL tokens
+(path choice is invisible to the application: paper Idea 3).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 128)
+    prompts = jax.random.randint(jax.random.key(1), (8, 24), 0, cfg.vocab)
+
+    outs = {}
+    for mode in ("direct", "staged", "adaptive"):
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=128, write_mode=mode, ring_size=8, page_size=16,
+            hot_threshold=3,
+        ))
+        outs[mode] = eng.generate(prompts, 32)
+        s = eng.stats
+        print(f"{mode:9s} tokens={outs[mode].shape} "
+              f"direct={s['direct_writes']} staged={s['staged_writes']} "
+              f"drains={s['drains']}")
+
+    same_sd = bool(jnp.all(outs["direct"] == outs["staged"]))
+    same_da = bool(jnp.all(outs["direct"] == outs["adaptive"]))
+    print(f"identical tokens across write paths: staged={same_sd} adaptive={same_da}")
+    assert same_sd and same_da
+
+
+if __name__ == "__main__":
+    main()

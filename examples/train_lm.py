@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Exercises the full production stack on CPU: config -> model -> synthetic
+data pipeline -> AdamW + warmup-cosine -> microbatched train_step with
+remat -> fault-tolerant Trainer (async checkpoints + resume + straggler
+EWMA). For the MoE variant (--arch granite-moe-3b-a800m) the adaptive
+expert-dispatch hot-mask updates from the monitor every step.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch ...]
+"""
+import argparse
+import dataclasses
+import logging
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig, Pipeline, SyntheticSource
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.train import Trainer, TrainerConfig, init_train_state, make_train_step
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--microbatches", type=int, default=2)
+    args = ap.parse_args()
+
+    # ~100M-scale variant of the assigned arch: same structure, wider than
+    # the smoke config
+    cfg = dataclasses.replace(
+        get_config(args.arch).reduced(),
+        n_layers=8, d_model=512, vocab=8192,
+        n_heads=8, n_kv_heads=4, head_dim=64, d_ff=1408,
+    )
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"tokens/step={args.batch * args.seq}")
+
+    opt = AdamW(lr=warmup_cosine(3e-4, 20, args.steps), weight_decay=0.1)
+    state = init_train_state(model, opt, jax.random.key(0), args.seq,
+                             n_hot_experts=2 if cfg.n_experts else 0)
+    step = jax.jit(make_train_step(model, opt, microbatches=args.microbatches,
+                                   n_hot_experts=2 if cfg.n_experts else 0))
+
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch, vocab=cfg.vocab)
+    pipe = Pipeline(SyntheticSource(dc)).start()
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(step, state, pipe, TrainerConfig(
+            total_steps=args.steps, checkpoint_every=100,
+            checkpoint_dir=ckpt_dir, log_every=20,
+        ))
+        result = trainer.run()
+    pipe.stop()
+    print(f"final loss {result['final_loss']:.4f} after {result['steps']} steps "
+          f"(start {trainer.history[0]:.4f})")
+    assert result["final_loss"] < trainer.history[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Config registry: ``get_config(arch)`` / ``ARCHS`` / shape specs.
+
+Every assigned architecture is a selectable config (``--arch <id>``); the
+reduced smoke variant is derived via ``get_config(arch).reduced()``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import (
+    ALL_SHAPES,
+    DENSE,
+    ENCDEC,
+    HYBRID,
+    MOE,
+    SHAPES,
+    SSM,
+    VLM,
+    ModelConfig,
+    ShapeSpec,
+    shape_applicable,
+)
+from .granite_moe_3b_a800m import CONFIG as _granite
+from .h2o_danube_3_4b import CONFIG as _danube
+from .llama_3_2_vision_90b import CONFIG as _llama_vision
+from .mamba2_130m import CONFIG as _mamba2
+from .nemotron_4_15b import CONFIG as _nemotron
+from .paper_urdma import FIG3_CLAIMS, PAPER_WORKLOAD, PaperWorkload
+from .qwen2_7b import CONFIG as _qwen2
+from .qwen3_moe_235b_a22b import CONFIG as _qwen3moe
+from .stablelm_1_6b import CONFIG as _stablelm
+from .whisper_medium import CONFIG as _whisper
+from .zamba2_2_7b import CONFIG as _zamba2
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        _nemotron,
+        _danube,
+        _qwen2,
+        _stablelm,
+        _granite,
+        _qwen3moe,
+        _mamba2,
+        _llama_vision,
+        _whisper,
+        _zamba2,
+    )
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Look up an assigned architecture by id (``--arch <id>``)."""
+    if arch not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {', '.join(sorted(ARCHS))}"
+        )
+    return ARCHS[arch]
+
+
+def get_shape(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {', '.join(SHAPES)}")
+    return SHAPES[name]
+
+
+__all__ = [
+    "ARCHS",
+    "ALL_SHAPES",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "shape_applicable",
+    "get_config",
+    "get_shape",
+    "FIG3_CLAIMS",
+    "PAPER_WORKLOAD",
+    "PaperWorkload",
+    "DENSE",
+    "MOE",
+    "SSM",
+    "HYBRID",
+    "ENCDEC",
+    "VLM",
+]

@@ -1,0 +1,26 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base family]
+
+32L d_model=1536 24H (GQA kv=8) expert_d_ff=512 vocab=49155, MoE 40e top-8.
+
+NOTE: the assignment line reads "MoE 40e top-8" while its trailing note says
+"32 experts"; we implement the explicit spec: 40 experts, top-8 (recorded in
+DESIGN.md §Arch-applicability).
+"""
+from .base import MOE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family=MOE,
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=0,
+    vocab=49155,
+    activation=SWIGLU,
+    n_experts=40,
+    top_k=8,
+    expert_d_ff=512,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,22 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818]
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000. The danube series
+adopts mistral-style SWA (window 4096), which also makes the long_500k
+decode shape runnable (KV bounded by the window).
+"""
+from .base import DENSE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family=DENSE,
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab=32000,
+    activation=SWIGLU,
+    sliding_window=4096,
+    rope_theta=10_000.0,
+)

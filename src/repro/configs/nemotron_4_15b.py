@@ -1,0 +1,20 @@
+"""nemotron-4-15b [dense] — GQA, squared-ReLU MLP. [arXiv:2402.16819]
+
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000.
+Nemotron-4 uses squared-ReLU activations in the MLP (2-matrix MLP) and
+rotary position embeddings; no QKV bias.
+"""
+from .base import DENSE, SQUARED_RELU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family=DENSE,
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=256000,
+    activation=SQUARED_RELU,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,19 @@
+"""qwen2-7b [dense] — GQA with QKV bias. [arXiv:2407.10671; hf]
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+"""
+from .base import DENSE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family=DENSE,
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    activation=SWIGLU,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)

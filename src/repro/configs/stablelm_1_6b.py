@@ -1,0 +1,22 @@
+"""stablelm-1.6b [dense] — MHA (kv=32), partial rotary, LayerNorm.
+[hf:stabilityai/stablelm-2-1_6b]
+
+24L d_model=2048 32H (GQA kv=32 == MHA) d_ff=5632 vocab=100352.
+StableLM-2 uses LayerNorm (not RMSNorm) and 25% partial rotary embeddings.
+"""
+from .base import DENSE, LAYERNORM, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family=DENSE,
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab=100352,
+    activation=SWIGLU,
+    norm=LAYERNORM,
+    rope_fraction=0.25,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,28 @@
+"""whisper-medium [audio] — encoder-decoder, conv frontend stubbed.
+[arXiv:2212.04356]
+
+24L (encoder) + 24L (decoder) d_model=1024 16H (kv=16 == MHA) d_ff=4096
+vocab=51865. GELU MLPs, LayerNorm, learned absolute positions in the
+decoder, sinusoidal (here: learned table) positions over 1500 audio frames.
+The mel-spectrogram conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (n_audio_frames x d_model).
+"""
+from .base import ENCDEC, GELU, LAYERNORM, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family=ENCDEC,
+    n_layers=24,       # decoder layers
+    n_enc_layers=24,   # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    activation=GELU,
+    norm=LAYERNORM,
+    learned_pos=True,
+    rope_fraction=0.0,  # whisper uses learned absolute positions, no rotary
+    max_position=448,       # whisper decoder context
+    n_audio_frames=1500,    # 30 s of audio after conv frontend
+)

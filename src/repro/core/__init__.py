@@ -1,0 +1,50 @@
+"""uRDMA core: the paper's contribution as a composable JAX module.
+
+Pieces (paper section in brackets):
+  types        WriteBatch / LatencyModel / cache configs
+  monitor      heavy-hitter counters: exact array + count-min sketch [§3.2]
+  policy       AlwaysOffload/AlwaysUnload/Hint/Frequency/Hysteresis [§3.2]
+  decision     DecisionModule — per-request offload/unload routing [§3.2]
+  umtt         software registration map (security parity) [§3.1]
+  unload       staging ring buffer + validated drain [§3.1]
+  staged_write RemoteWriteEngine — the bidirectional write API [§3]
+  simulator    calibrated MTT/PCIe latency model -> Fig. 3 repro [§4]
+"""
+from .decision import DecisionModule, expert_hot_mask, page_threshold
+from .monitor import CMSMonitor, ExactMonitor, MonitorState, calibrate_threshold
+from .policy import (
+    AlwaysOffload,
+    AlwaysUnload,
+    FrequencyPolicy,
+    HintPolicy,
+    HysteresisPolicy,
+    top_k_hot_table,
+)
+from .simulator import RDMASimulator, SimResult, sweep_point, zipf_regions
+from .staged_write import EngineState, RemoteWriteEngine
+from .types import (
+    OFFLOAD,
+    UNLOAD,
+    CPUTLBConfig,
+    DecisionStats,
+    LatencyModel,
+    MTTConfig,
+    WriteBatch,
+    make_write_batch,
+)
+from .umtt import PERM_READ, PERM_WRITE, UMTT, deregister, make_umtt, register, validate
+from .unload import StagingRing, append, drain, make_ring, need_drain
+
+__all__ = [
+    "DecisionModule", "expert_hot_mask", "page_threshold",
+    "CMSMonitor", "ExactMonitor", "MonitorState", "calibrate_threshold",
+    "AlwaysOffload", "AlwaysUnload", "FrequencyPolicy", "HintPolicy",
+    "HysteresisPolicy", "top_k_hot_table",
+    "RDMASimulator", "SimResult", "sweep_point", "zipf_regions",
+    "EngineState", "RemoteWriteEngine",
+    "OFFLOAD", "UNLOAD", "CPUTLBConfig", "DecisionStats", "LatencyModel",
+    "MTTConfig", "WriteBatch", "make_write_batch",
+    "PERM_READ", "PERM_WRITE", "UMTT", "deregister", "make_umtt", "register",
+    "validate",
+    "StagingRing", "append", "drain", "make_ring", "need_drain",
+]

@@ -1,0 +1,72 @@
+"""Decision module (paper §3.2): intercept write requests, consult the
+monitor + policy, and emit per-request offload/unload routing decisions.
+
+The module is a thin, jit-compatible composition of ``repro.core.monitor``
+and ``repro.core.policy`` — by design: the paper requires decisions "faster
+than the expected savings" (hundreds of ns), so the hot path is one counter
+update + one compare per request, fully vectorized over the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from .monitor import CMSMonitor, ExactMonitor, MonitorState, calibrate_threshold
+from .policy import top_k_hot_table
+from .types import DecisionStats, WriteBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionModule:
+    """Routes write batches between the offload and unload paths.
+
+    ``policy.decide`` consumes the (already-updated) monitor state — the
+    paper's order: "when a request arrives, uRDMA increments the counter
+    corresponding to the remote page ... deciding whether to unload a
+    request requires updating one counter and comparing it with the
+    threshold".
+    """
+
+    policy: object  # any of repro.core.policy.*
+    monitor: Optional[object] = None  # ExactMonitor | CMSMonitor
+
+    def init_state(self) -> Optional[MonitorState]:
+        if self.monitor is not None:
+            return self.monitor.init()
+        return None
+
+    def __call__(
+        self, state: Optional[MonitorState], batch: WriteBatch
+    ) -> Tuple[jnp.ndarray, Optional[MonitorState], DecisionStats]:
+        """-> (unload_mask bool[n], new monitor state, stats)."""
+        if self.monitor is not None:
+            state = self.monitor.update(state, batch.region)
+        unload = self.policy.decide(state, batch)
+        return unload, state, DecisionStats.from_mask(unload)
+
+
+def expert_hot_mask(expert_load: jnp.ndarray, offload_top_k: int) -> jnp.ndarray:
+    """bool[E] hot-expert table from accumulated expert-load counters.
+
+    This is the paper's hint/frequency policy applied to MoE expert ids:
+    hot (heavy-hitter) experts stay on the direct/offload dispatch path,
+    cold experts are staged. Called off the critical path (between steps),
+    exactly like the paper's threshold recalibration.
+    """
+    return top_k_hot_table(expert_load, offload_top_k)
+
+
+def page_threshold(counts: jnp.ndarray, offload_top_k: int) -> jnp.ndarray:
+    """Count threshold putting ~top-k pages on the offload path."""
+    return calibrate_threshold(counts, offload_top_k)
+
+
+__all__ = [
+    "DecisionModule",
+    "expert_hot_mask",
+    "page_threshold",
+    "ExactMonitor",
+    "CMSMonitor",
+]

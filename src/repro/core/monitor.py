@@ -1,0 +1,126 @@
+"""Heavy-hitter monitor for the decision module (paper §3.2 "Monitor").
+
+The paper tracks remote-page access frequencies with an array of counters,
+one per remote 4 KB page, and unloads small writes whose estimated target
+pages appear less frequently than a relative-frequency threshold.
+
+We provide two interchangeable monitors:
+
+* ``ExactMonitor`` — the paper's array-of-counters (one int32 per region).
+  Cheap when the region universe is known and bounded (it is: registered
+  memory regions are known at registration time).
+* ``CMSMonitor`` — a count-min sketch for unbounded / huge universes, with
+  multiply-shift hashing. This is the variant whose update/query hot path
+  we also implement as a Pallas kernel (``repro.kernels.cms``), since the
+  paper requires the policy to answer "faster than the expected savings"
+  (hundreds of ns).
+
+Both are pure functional: ``update`` returns a new state; ``query`` is
+side-effect free. Counters optionally age via periodic halving so the
+monitor tracks *current* heavy hitters under drifting workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Fixed odd multipliers for multiply-shift hashing (Dietzfelbinger et al.).
+_CMS_MULTIPLIERS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+_CMS_OFFSETS = (0x165667B1, 0xD3A2646D, 0xFD7046C5, 0xB55A4F09)
+
+
+class MonitorState(NamedTuple):
+    counts: jnp.ndarray  # exact:  int32[n_regions]; cms: int32[depth, width]
+    total: jnp.ndarray   # int32 scalar — total writes observed
+
+
+def _cms_hash(ids: jnp.ndarray, row: int, log2_width: int) -> jnp.ndarray:
+    """Multiply-shift hash of int32 ids into [0, 2**log2_width)."""
+    x = ids.astype(jnp.uint32)
+    a = jnp.uint32(_CMS_MULTIPLIERS[row])
+    b = jnp.uint32(_CMS_OFFSETS[row])
+    return ((x * a + b) >> jnp.uint32(32 - log2_width)).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactMonitor:
+    """One counter per region (paper's baseline monitor)."""
+
+    n_regions: int
+    decay_every: int = 0  # 0 = never decay; else halve counters periodically
+
+    def init(self) -> MonitorState:
+        return MonitorState(
+            counts=jnp.zeros((self.n_regions,), jnp.int32),
+            total=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, state: MonitorState, region_ids: jnp.ndarray) -> MonitorState:
+        counts = state.counts.at[region_ids].add(1)
+        total = state.total + region_ids.shape[0]
+        if self.decay_every:
+            do_decay = (total % self.decay_every) < (state.total % self.decay_every)
+            counts = jnp.where(do_decay, counts // 2, counts)
+        return MonitorState(counts, total)
+
+    def query(self, state: MonitorState, region_ids: jnp.ndarray) -> jnp.ndarray:
+        return state.counts[region_ids]
+
+
+@dataclasses.dataclass(frozen=True)
+class CMSMonitor:
+    """Count-min sketch monitor (depth x 2**log2_width)."""
+
+    depth: int = 4
+    log2_width: int = 12
+    decay_every: int = 0
+
+    def __post_init__(self):
+        if not (1 <= self.depth <= len(_CMS_MULTIPLIERS)):
+            raise ValueError(f"depth must be in [1, {len(_CMS_MULTIPLIERS)}]")
+
+    @property
+    def width(self) -> int:
+        return 1 << self.log2_width
+
+    def init(self) -> MonitorState:
+        return MonitorState(
+            counts=jnp.zeros((self.depth, self.width), jnp.int32),
+            total=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, state: MonitorState, region_ids: jnp.ndarray) -> MonitorState:
+        counts = state.counts
+        for r in range(self.depth):
+            counts = counts.at[r, _cms_hash(region_ids, r, self.log2_width)].add(1)
+        total = state.total + region_ids.shape[0]
+        if self.decay_every:
+            do_decay = (total % self.decay_every) < (state.total % self.decay_every)
+            counts = jnp.where(do_decay, counts // 2, counts)
+        return MonitorState(counts, total)
+
+    def query(self, state: MonitorState, region_ids: jnp.ndarray) -> jnp.ndarray:
+        est = state.counts[0, _cms_hash(region_ids, 0, self.log2_width)]
+        for r in range(1, self.depth):
+            est = jnp.minimum(
+                est, state.counts[r, _cms_hash(region_ids, r, self.log2_width)]
+            )
+        return est
+
+
+def calibrate_threshold(counts: jnp.ndarray, offload_top_k: int) -> jnp.ndarray:
+    """Pick a count threshold so ~top-k regions stay offloaded.
+
+    The paper: "Good thresholds can be determined out of the critical path by
+    looking at the frequency distribution." This helper does exactly that —
+    call it off the hot loop (e.g. every N batches) and feed the scalar back
+    into ``FrequencyPolicy``.
+    """
+    k = min(int(offload_top_k), counts.shape[0])
+    if k <= 0:
+        return jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+    top = jax.lax.top_k(counts.reshape(-1), k)[0]
+    return top[-1].astype(jnp.int32)

@@ -1,0 +1,146 @@
+"""Unload policies (paper §3.2).
+
+A policy maps a batch of write requests + monitor state to a per-request
+routing decision: OFFLOAD (keep on the RNIC / direct path) or UNLOAD
+(reroute via the staging buffer + local copy).
+
+Paper-faithful policies:
+
+* ``HintPolicy`` — "assumes the application knows and marks the requests
+  that should be offloaded in the RDMA post". We also support the membership
+  form used in the evaluation ("offloads only the top-4096 heavy-hitter
+  memory regions") via a boolean hot-region table.
+* ``FrequencyPolicy`` — "tracks [heavy-hitter pages] using the monitor and
+  reroutes requests to the least frequently accessed pages to the unload
+  path" — unload iff estimated count < threshold, for small writes only.
+
+Plus trivial ``AlwaysOffload`` / ``AlwaysUnload`` (the paper's orange/green
+Fig. 3 lines), and a beyond-paper ``Bandit``-style hysteresis wrapper.
+
+All ``decide`` functions are vectorized and jit-compatible: they must run on
+the critical path "faster than the expected savings".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .monitor import CMSMonitor, ExactMonitor, MonitorState
+from .types import WriteBatch
+
+Monitor = Union[ExactMonitor, CMSMonitor]
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysOffload:
+    needs_monitor: bool = False
+
+    def decide(self, state: Optional[MonitorState], batch: WriteBatch) -> jnp.ndarray:
+        return jnp.zeros((batch.n,), jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysUnload:
+    needs_monitor: bool = False
+
+    def decide(self, state: Optional[MonitorState], batch: WriteBatch) -> jnp.ndarray:
+        return jnp.ones((batch.n,), jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class HintPolicy:
+    """Offload requests the application marked hot; unload the rest.
+
+    Either consume the per-request ``hint`` field (paper's "marks the
+    requests ... in the RDMA post"), or look the region up in a hot-region
+    membership table (paper's evaluation: hot = top-4096 regions).
+    ``max_unload_size``: only small writes are worth unloading (paper §3.2);
+    larger ones stay offloaded regardless of hotness.
+    """
+
+    hot_regions: Optional[jnp.ndarray] = None  # bool[n_regions] membership
+    max_unload_size: int = 4096
+    needs_monitor: bool = False
+
+    def decide(self, state: Optional[MonitorState], batch: WriteBatch) -> jnp.ndarray:
+        if self.hot_regions is not None:
+            hot = self.hot_regions[batch.region]
+        else:
+            hot = batch.hint.astype(jnp.bool_)
+        small = batch.size <= self.max_unload_size
+        return (~hot) & small
+
+
+@dataclasses.dataclass(frozen=True)
+class FrequencyPolicy:
+    """Unload small writes to regions colder than a frequency threshold.
+
+    ``threshold`` is an absolute count; recalibrate it off the critical path
+    with ``monitor.calibrate_threshold(counts, offload_top_k)``. ``rel``
+    alternatively expresses it relative to the uniform expectation
+    (count < rel * total / n_regions).
+    """
+
+    monitor: Monitor = dataclasses.field(default_factory=lambda: ExactMonitor(1 << 20))
+    threshold: Optional[int] = None
+    rel: Optional[float] = None
+    n_regions: Optional[int] = None
+    max_unload_size: int = 4096
+    needs_monitor: bool = True
+
+    def decide(self, state: MonitorState, batch: WriteBatch) -> jnp.ndarray:
+        est = self.monitor.query(state, batch.region)
+        if self.threshold is not None:
+            thr = jnp.asarray(self.threshold, jnp.int32)
+        elif self.rel is not None:
+            n_regions = self.n_regions or getattr(self.monitor, "n_regions", None)
+            if n_regions is None:
+                raise ValueError("rel threshold needs n_regions")
+            thr = (self.rel * state.total.astype(jnp.float32) / n_regions).astype(
+                jnp.int32
+            )
+        else:
+            raise ValueError("FrequencyPolicy needs threshold or rel")
+        small = batch.size <= self.max_unload_size
+        return (est < thr) & small
+
+
+@dataclasses.dataclass(frozen=True)
+class HysteresisPolicy:
+    """Beyond-paper: wrap a base policy with decision hysteresis.
+
+    Flapping between paths wastes staging-buffer locality; require the base
+    decision to clear a margin before switching. For FrequencyPolicy, this
+    means two thresholds (unload below lo, offload above hi); in between,
+    prefer offload (the safe default — the paper notes blind unloading can
+    worsen performance).
+    """
+
+    monitor: Monitor = dataclasses.field(default_factory=lambda: ExactMonitor(1 << 20))
+    lo: int = 2
+    hi: int = 8
+    max_unload_size: int = 4096
+    needs_monitor: bool = True
+
+    def decide(self, state: MonitorState, batch: WriteBatch) -> jnp.ndarray:
+        est = self.monitor.query(state, batch.region)
+        small = batch.size <= self.max_unload_size
+        return (est < self.lo) & small
+
+
+def top_k_hot_table(counts: jnp.ndarray, k: int) -> jnp.ndarray:
+    """bool[n_regions] table marking the top-k regions by count.
+
+    Used to build the paper's evaluation policy ("offloads only the top-4096
+    heavy-hitter memory regions") from observed or oracle frequencies.
+    """
+    n = counts.shape[0]
+    k = min(int(k), n)
+    hot = jnp.zeros((n,), jnp.bool_)
+    if k == 0:
+        return hot
+    _, idx = jax.lax.top_k(counts, k)
+    return hot.at[idx].set(True)

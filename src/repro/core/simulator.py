@@ -1,0 +1,199 @@
+"""Calibrated RDMA-write latency simulator — reproduces the paper's Fig. 3.
+
+No RNIC exists in this container, so the paper's §4 evaluation is reproduced
+with a discrete-event model whose constants are calibrated from the paper's
+own numbers (≈2.6 µs all-hit RTT, ≈5.1 µs at 2^20 regions, ≈3.4 µs unload,
+≈3.5 µs unload at 2^20): see ``repro.core.types.LatencyModel``.
+
+Model components (paper §2 "lifetime of an RDMA write", target side):
+
+* MTT cache — set-associative LRU over region translations at the target
+  RNIC. OFFLOADED writes probe/fill it; hit -> t_offload_hit RTT, miss ->
+  t_offload_miss (translation fetched over PCIe). UNLOADED writes bypass it:
+  they land in the staging ring whose (few, hot) translations stay resident
+  — we charge them t_unload_base instead.
+* CPU dTLB — the unload path's final memcpy may take "a potential TLB miss"
+  (paper §3.1); a second, larger set-associative LRU adds t_cpu_tlb_walk on
+  misses. This is what lifts unload from ~3.38 to ~3.5 µs at 2^20 regions.
+* Copy cost — payloads beyond the 16 B inlined size add size/copy_gbps.
+
+The simulation scans the write stream sequentially (cache state is genuinely
+sequential) under ``lax.scan``; the workload generator reproduces §4: 16 B
+inlined writes, destination 4 KB region drawn Zipf(0.5) from R regions.
+
+THE POLICY CODE UNDER TEST IS THE REAL ONE: the adaptive lines in Fig. 3 are
+produced by routing each write through ``repro.core.policy`` / ``decision``
+exactly as the framework routes KV-cache/MoE writes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import CPUTLBConfig, LatencyModel, MTTConfig, WriteBatch
+
+
+# ---------------------------------------------------------------------------
+# Workload (paper §4)
+# ---------------------------------------------------------------------------
+
+
+def zipf_regions(
+    key: jax.Array, n_writes: int, n_regions: int, skew: float = 0.5
+) -> jnp.ndarray:
+    """Destination regions ~ discrete Zipf(skew) over [0, n_regions)."""
+    ranks = jnp.arange(1, n_regions + 1, dtype=jnp.float32)
+    weights = ranks ** -skew
+    cdf = jnp.cumsum(weights)
+    cdf = cdf / cdf[-1]
+    u = jax.random.uniform(key, (n_writes,))
+    return jnp.searchsorted(cdf, u).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Set-associative LRU cache (MTT / CPU dTLB)
+# ---------------------------------------------------------------------------
+
+
+class CacheState(NamedTuple):
+    tags: jnp.ndarray   # int32[n_sets, n_ways], -1 = empty
+    stamp: jnp.ndarray  # int32[n_sets, n_ways] — last-use time (LRU)
+    clock: jnp.ndarray  # int32 scalar
+
+
+def make_cache(n_sets: int, n_ways: int) -> CacheState:
+    return CacheState(
+        tags=jnp.full((n_sets, n_ways), -1, jnp.int32),
+        stamp=jnp.zeros((n_sets, n_ways), jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_access(
+    state: CacheState, region: jnp.ndarray, enabled: jnp.ndarray
+) -> Tuple[CacheState, jnp.ndarray]:
+    """One probe+fill. ``enabled`` False leaves the cache untouched (the
+    write bypassed this cache). Returns (new state, hit flag)."""
+    n_sets, n_ways = state.tags.shape
+    s = region % n_sets
+    line_tags = state.tags[s]
+    line_stamp = state.stamp[s]
+    hits = line_tags == region
+    hit = jnp.any(hits)
+    clock = state.clock + 1
+    way_hit = jnp.argmax(hits)
+    way_lru = jnp.argmin(line_stamp)
+    way = jnp.where(hit, way_hit, way_lru)
+    new_tags = line_tags.at[way].set(region)
+    new_stamp = line_stamp.at[way].set(clock)
+    tags = jnp.where(enabled, state.tags.at[s].set(new_tags), state.tags)
+    stamp = jnp.where(enabled, state.stamp.at[s].set(new_stamp), state.stamp)
+    return CacheState(tags, stamp, jnp.where(enabled, clock, state.clock)), hit & enabled
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+
+class SimResult(NamedTuple):
+    latency_us: jnp.ndarray   # [n] per-write latency
+    mtt_hits: jnp.ndarray     # int32 — offloaded writes that hit the MTT
+    n_offloaded: jnp.ndarray  # int32
+    n_unloaded: jnp.ndarray   # int32
+
+
+@dataclasses.dataclass(frozen=True)
+class RDMASimulator:
+    mtt: MTTConfig = MTTConfig()
+    cpu_tlb: CPUTLBConfig = CPUTLBConfig()
+    lat: LatencyModel = LatencyModel()
+
+    def run(
+        self,
+        regions: jnp.ndarray,       # int32[n] destination regions (time order)
+        unload_mask: jnp.ndarray,   # bool[n] — decision per write
+        sizes: Optional[jnp.ndarray] = None,
+    ) -> SimResult:
+        n = regions.shape[0]
+        if sizes is None:
+            sizes = jnp.full((n,), 16, jnp.int32)
+        mtt0 = make_cache(self.mtt.n_sets, self.mtt.n_ways)
+        tlb0 = make_cache(self.cpu_tlb.n_sets, self.cpu_tlb.n_ways)
+        lat = self.lat
+
+        def step(carry, xs):
+            mtt, tlb = carry
+            region, unload, size = xs
+            # offloaded writes probe the RNIC MTT
+            mtt, mtt_hit = cache_access(mtt, region, ~unload)
+            # unloaded writes take the staged path; the final memcpy
+            # probes the CPU dTLB for the destination page
+            tlb, tlb_hit = cache_access(tlb, region, unload)
+            t_off = jnp.where(mtt_hit, lat.t_offload_hit, lat.t_offload_miss)
+            t_un = (
+                lat.t_unload_base
+                + jnp.where(tlb_hit, 0.0, lat.t_cpu_tlb_walk)
+                + lat.unload_copy_us(size)
+            )
+            t = jnp.where(unload, t_un, t_off)
+            return (mtt, tlb), (t, mtt_hit)
+
+        (_, _), (lat_us, mtt_hits) = lax.scan(
+            step, (mtt0, tlb0), (regions, unload_mask, sizes)
+        )
+        n_un = jnp.sum(unload_mask.astype(jnp.int32))
+        return SimResult(
+            latency_us=lat_us,
+            mtt_hits=jnp.sum(mtt_hits.astype(jnp.int32)),
+            n_offloaded=n - n_un,
+            n_unloaded=n_un,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 sweep driver
+# ---------------------------------------------------------------------------
+
+
+def decide_batch(policy, monitor, regions: jnp.ndarray) -> jnp.ndarray:
+    """Run the REAL decision module over the whole write stream.
+
+    For the stateless paper policies (hint tables), decisions are per-write
+    and order-independent; for frequency policies the monitor is updated
+    with the stream (batched — the steady-state approximation of per-write
+    updates, valid for the 5M-write steady-state averages Fig. 3 reports).
+    """
+    batch = WriteBatch(
+        region=regions,
+        offset=jnp.zeros_like(regions),
+        size=jnp.full(regions.shape, 16, jnp.int32),
+        hint=jnp.zeros_like(regions),
+    )
+    state = monitor.init() if monitor is not None else None
+    if monitor is not None:
+        state = monitor.update(state, regions)
+    return policy.decide(state, batch)
+
+
+def sweep_point(
+    key: jax.Array,
+    n_regions: int,
+    n_writes: int,
+    warmup: int,
+    policy,
+    monitor=None,
+    skew: float = 0.5,
+    sim: Optional[RDMASimulator] = None,
+) -> Tuple[float, SimResult]:
+    """Average steady-state RTT (µs) for one Fig. 3 x-axis point."""
+    sim = sim or RDMASimulator()
+    regions = zipf_regions(key, n_writes, n_regions, skew)
+    unload = decide_batch(policy, monitor, regions)
+    res = sim.run(regions, unload)
+    avg = float(jnp.mean(res.latency_us[warmup:]))
+    return avg, res

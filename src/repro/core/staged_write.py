@@ -1,0 +1,176 @@
+"""RemoteWriteEngine — the paper's bidirectional offload, as one API.
+
+``engine.write(state, batch, payload)`` is path-agnostic for callers
+(paper Idea 3: "unload through the offload interface"): the decision module
+routes each request, the unload module stages + drains, the offload path
+scatters directly. Callers receive updated memory and never observe which
+path ran — data / final location / security parity are the engine's job.
+
+Destination model: a register-addressed memory of ``n_regions`` regions,
+each ``region_width`` elements (the framework instantiates this as KV-cache
+pages, expert buffers, or parameter shards). A write = (region, offset,
+size<=width, stag, payload[width]).
+
+The OFFLOAD path scatters payloads straight to (region, offset) — dynamic,
+destination-order writes (the RNIC-direct analogue). The UNLOAD path appends
+to the staging ring and defers placement to a drain (dense, sequential,
+validated against uMTT). Drains run when the ring is near capacity or when
+``flush`` is called — mirroring the target CPU polling its completion queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import umtt as U
+from . import unload as UL
+from .decision import DecisionModule
+from .monitor import MonitorState
+from .types import WriteBatch
+
+
+class EngineState(NamedTuple):
+    ring: UL.StagingRing
+    table: U.UMTT
+    monitor: Optional[MonitorState]
+    n_offloaded: jnp.ndarray  # int32 running totals (telemetry)
+    n_unloaded: jnp.ndarray
+    n_rejected: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteWriteEngine:
+    decision: DecisionModule
+    ring_capacity: int = 1024
+    width: int = 16  # payload elements per write
+    dtype: object = jnp.float32
+
+    # -- lifecycle ---------------------------------------------------------
+    def init_state(self, table: U.UMTT) -> EngineState:
+        return EngineState(
+            ring=UL.make_ring(self.ring_capacity, self.width, self.dtype),
+            table=table,
+            monitor=self.decision.init_state(),
+            n_offloaded=jnp.zeros((), jnp.int32),
+            n_unloaded=jnp.zeros((), jnp.int32),
+            n_rejected=jnp.zeros((), jnp.int32),
+        )
+
+    # -- offload path --------------------------------------------------------
+    @staticmethod
+    def write_direct(
+        mem: jnp.ndarray, batch: WriteBatch, payload: jnp.ndarray,
+        mask: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """Direct scatter to (region, offset). mask selects participating rows."""
+        n, width = payload.shape
+        lane = jnp.arange(width)[None, :]
+        elem = lane < batch.size[:, None]
+        if mask is not None:
+            elem &= mask[:, None]
+        # NOTE: sentinel must be OUT OF RANGE (not -1 — negative wraps!)
+        dst = jnp.where(
+            elem,
+            batch.region[:, None] * mem.shape[1] + batch.offset[:, None] + lane,
+            mem.size,
+        )
+        flat = mem.reshape(-1).at[dst.reshape(-1)].set(
+            payload.reshape(-1).astype(mem.dtype), mode="drop"
+        )
+        return flat.reshape(mem.shape)
+
+    # -- ordering parity (beyond-paper; see DESIGN.md) -----------------------
+    @staticmethod
+    def _last_wins(batch: WriteBatch) -> jnp.ndarray:
+        """bool[n]: False where a LATER write in the same batch hits the same
+        (region, offset). Gives deterministic intra-batch last-wins semantics
+        across both paths."""
+        same = (batch.region[:, None] == batch.region[None, :]) & (
+            batch.offset[:, None] == batch.offset[None, :]
+        )
+        later = jnp.arange(batch.n)[None, :] > jnp.arange(batch.n)[:, None]
+        return ~jnp.any(same & later, axis=1)
+
+    @staticmethod
+    def _conflicts_ring(ring: UL.StagingRing, batch: WriteBatch) -> jnp.ndarray:
+        """True if any incoming write targets a destination with a pending
+        (undrained) staged entry — forces a drain first, so cross-batch
+        program order per destination is preserved."""
+        hit = (
+            (batch.region[:, None] == ring.region[None, :])
+            & (batch.offset[:, None] == ring.offset[None, :])
+            & ring.live[None, :]
+        )
+        return jnp.any(hit)
+
+    # -- combined write --------------------------------------------------------
+    def write(
+        self,
+        state: EngineState,
+        mem: jnp.ndarray,
+        batch: WriteBatch,
+        payload: jnp.ndarray,
+        stag: jnp.ndarray,
+    ) -> Tuple[EngineState, jnp.ndarray]:
+        """Route a batch of writes. Returns (state, mem).
+
+        ORDERING PARITY (beyond the paper's prototype, which guarantees
+        none): (a) within a batch, the last write to a (region, offset)
+        wins regardless of path; (b) across batches, a drain is forced
+        whenever an incoming write targets a destination with a pending
+        staged entry. The paper predicts ordering parity "would likely
+        incur a performance penalty" — here it costs one [n x cap] compare
+        plus occasional early drains (measured in benchmarks/engine.py).
+
+        Drain-before-overflow is enforced with a fixed-shape ``lax.cond`` so
+        the whole engine stays jit/scan-compatible inside serving loops.
+        """
+        unload_mask, mon, _ = self.decision(state.monitor, batch)
+        keep = self._last_wins(batch)
+
+        # drain first if (a) overflow risk or (b) destination conflict
+        def do_drain(args):
+            ring, m = args
+            ring, m, rej = UL.drain(ring, m, state.table)
+            return ring, m, rej
+
+        def no_drain(args):
+            ring, m = args
+            return ring, m, jnp.zeros((), jnp.int32)
+
+        must_drain = UL.need_drain(state.ring, batch.n) | self._conflicts_ring(
+            state.ring, batch
+        )
+        ring, mem, rejected = jax.lax.cond(
+            must_drain, do_drain, no_drain, (state.ring, mem)
+        )
+
+        # 1) offload subset: direct scatter now
+        mem = self.write_direct(mem, batch, payload, ~unload_mask & keep)
+
+        # 2) unload subset: sequential append into the staging ring
+        ring, _ = UL.append(
+            ring, payload, batch.region, batch.offset, batch.size, stag,
+            unload_mask & keep,
+        )
+
+        n_u = jnp.sum(unload_mask.astype(jnp.int32))
+        new_state = EngineState(
+            ring=ring,
+            table=state.table,
+            monitor=mon,
+            n_offloaded=state.n_offloaded + batch.n - n_u,
+            n_unloaded=state.n_unloaded + n_u,
+            n_rejected=state.n_rejected + rejected,
+        )
+        return new_state, mem
+
+    def flush(
+        self, state: EngineState, mem: jnp.ndarray
+    ) -> Tuple[EngineState, jnp.ndarray]:
+        """Drain all staged entries (end of step / completion poll)."""
+        ring, mem, rejected = UL.drain(state.ring, mem, state.table)
+        return state._replace(ring=ring, n_rejected=state.n_rejected + rejected), mem

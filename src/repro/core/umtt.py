@@ -1,0 +1,89 @@
+"""uMTT — uRDMA's software memory-registration map (paper §3.1).
+
+"To guarantee security parity, the address, size, stag, and permission
+metadata for each memory region registration are stored in uMTT, a uRDMA
+local map, and removed during de-registration. The security check ... is
+performed via a lookup into this map."
+
+The map is a fixed-capacity structure-of-arrays so that batched validation
+jits: each unloaded write is checked (region/address range, stag match,
+write permission) before the drain copies it to its final destination.
+Registration/deregistration are host-side (setup-time) operations, mirroring
+RDMA memory registration being off the critical path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+PERM_READ = 1
+PERM_WRITE = 2
+
+
+class UMTT(NamedTuple):
+    """Registration table. Rows with valid==0 are free slots."""
+
+    base: jnp.ndarray   # int32[cap] — first region id of the registration
+    limit: jnp.ndarray  # int32[cap] — one past the last region id
+    stag: jnp.ndarray   # int32[cap] — steering tag handed to initiators
+    perm: jnp.ndarray   # int32[cap] — PERM_* bitmask
+    valid: jnp.ndarray  # bool[cap]
+
+
+def make_umtt(capacity: int = 4096) -> UMTT:
+    z = jnp.zeros((capacity,), jnp.int32)
+    return UMTT(z, z, z, z, jnp.zeros((capacity,), jnp.bool_))
+
+
+def register(
+    table: UMTT, base: int, n_regions: int, stag: int, perm: int = PERM_WRITE
+) -> UMTT:
+    """Register [base, base+n_regions) under ``stag``. Host-side (setup)."""
+    free = jnp.argmin(table.valid)  # first free slot (valid is bool)
+    # refuse to overwrite a live slot (table full)
+    occupied = table.valid[free]
+    new = UMTT(
+        table.base.at[free].set(jnp.where(occupied, table.base[free], base)),
+        table.limit.at[free].set(
+            jnp.where(occupied, table.limit[free], base + n_regions)
+        ),
+        table.stag.at[free].set(jnp.where(occupied, table.stag[free], stag)),
+        table.perm.at[free].set(jnp.where(occupied, table.perm[free], perm)),
+        table.valid.at[free].set(True),
+    )
+    return new
+
+
+def deregister(table: UMTT, stag: int) -> UMTT:
+    """Remove all registrations carrying ``stag`` (paper: removed at dereg)."""
+    hit = table.valid & (table.stag == stag)
+    return table._replace(valid=table.valid & ~hit)
+
+
+def validate(
+    table: UMTT,
+    region: jnp.ndarray,
+    stag: jnp.ndarray,
+    need_perm: int = PERM_WRITE,
+) -> jnp.ndarray:
+    """Batched security check for unloaded writes.
+
+    region/stag: int32[n]. True where some live registration covers the
+    region, carries the same stag, and grants ``need_perm``. This is the
+    paper's replacement for the RNIC-side MTT protection check.
+    """
+    r = region[:, None]
+    s = stag[:, None]
+    ok = (
+        table.valid[None, :]
+        & (r >= table.base[None, :])
+        & (r < table.limit[None, :])
+        & (s == table.stag[None, :])
+        & ((table.perm[None, :] & need_perm) == need_perm)
+    )
+    return jnp.any(ok, axis=1)
+
+
+def occupancy(table: UMTT) -> Tuple[jnp.ndarray, int]:
+    return jnp.sum(table.valid), table.valid.shape[0]

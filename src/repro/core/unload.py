@@ -1,0 +1,125 @@
+"""Unload module (paper §3.1): staging ring buffer + drain.
+
+The unload path replaces a write to an arbitrary destination region with
+
+  1. an append into the next slots of a small, reused STAGING RING on the
+     target (initiator side: slot allocation + metadata bookkeeping — the
+     paper's "rerouting the writeImm to the next slot in the target's
+     temporary buffer" and "updating the local metadata about buffer usage");
+  2. a target-side DRAIN that (a) validates each staged entry against uMTT
+     (address/size/stag/permission — security parity) and (b) copies the
+     payload to its true destination (functional parity).
+
+Entries carry (region, offset, size, stag) alongside the payload — the
+paper packs the destination address into the writeImm payload and the stag
+into the immediate value; we keep them as separate arrays of one staging
+record.
+
+Everything is fixed-shape and jit-compatible; the ring state is a pytree
+carried through training/serving steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import umtt as U
+
+
+class StagingRing(NamedTuple):
+    """Target-side staging buffer (one per queue pair in the paper)."""
+
+    payload: jnp.ndarray  # [cap, width] staged payloads
+    region: jnp.ndarray   # int32[cap] destination region id
+    offset: jnp.ndarray   # int32[cap] element offset within the region
+    size: jnp.ndarray     # int32[cap] valid payload elements
+    stag: jnp.ndarray     # int32[cap] steering tag for the uMTT check
+    live: jnp.ndarray     # bool[cap] slot holds an undrained entry
+    head: jnp.ndarray     # int32 scalar — next slot to write (append cursor)
+
+
+def make_ring(capacity: int, width: int, dtype=jnp.float32) -> StagingRing:
+    return StagingRing(
+        payload=jnp.zeros((capacity, width), dtype),
+        region=jnp.zeros((capacity,), jnp.int32),
+        offset=jnp.zeros((capacity,), jnp.int32),
+        size=jnp.zeros((capacity,), jnp.int32),
+        stag=jnp.zeros((capacity,), jnp.int32),
+        live=jnp.zeros((capacity,), jnp.bool_),
+        head=jnp.zeros((), jnp.int32),
+    )
+
+
+def append(
+    ring: StagingRing,
+    payload: jnp.ndarray,  # [n, width]
+    region: jnp.ndarray,
+    offset: jnp.ndarray,
+    size: jnp.ndarray,
+    stag: jnp.ndarray,
+    mask: jnp.ndarray,  # bool[n] — which requests take the unload path
+) -> Tuple[StagingRing, jnp.ndarray]:
+    """Sequential append of masked entries at the ring head.
+
+    Staging writes are CONTIGUOUS by construction (slot = head + rank of
+    the request among unloaded ones) — this is the whole point: the ring
+    is small and sequentially written, hence "MTT-cache-resident" in the
+    paper and dense/fusable on TPU.
+
+    Returns (new ring, slot[n] — assigned slot per request, -1 if not
+    staged). Entries beyond capacity wrap (callers drain before overflow;
+    ``need_drain`` exposes the watermark).
+    """
+    cap = ring.payload.shape[0]
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1  # rank among staged
+    # sentinel must be out of range (cap), not -1 (negative indices wrap)
+    slot = jnp.where(mask, (ring.head + rank) % cap, cap)
+    ring = StagingRing(
+        payload=ring.payload.at[slot].set(payload, mode="drop"),
+        region=ring.region.at[slot].set(region, mode="drop"),
+        offset=ring.offset.at[slot].set(offset, mode="drop"),
+        size=ring.size.at[slot].set(size, mode="drop"),
+        stag=ring.stag.at[slot].set(stag, mode="drop"),
+        live=ring.live.at[slot].set(mask, mode="drop"),
+        head=(ring.head + jnp.sum(mask.astype(jnp.int32))) % cap,
+    )
+    return ring, slot
+
+
+def need_drain(ring: StagingRing, incoming: int) -> jnp.ndarray:
+    """True if appending ``incoming`` more entries could overwrite live data."""
+    free = ring.payload.shape[0] - jnp.sum(ring.live.astype(jnp.int32))
+    return free < incoming
+
+
+def drain(
+    ring: StagingRing,
+    mem: jnp.ndarray,  # [n_regions, region_width] destination memory
+    table: U.UMTT,
+) -> Tuple[StagingRing, jnp.ndarray, jnp.ndarray]:
+    """Target-CPU drain: validate each live entry against uMTT, then copy
+    payloads to their destination regions. Returns (empty ring, new mem,
+    n_rejected — entries that failed the security check).
+
+    On TPU the copy loop is the ``staged_scatter`` Pallas kernel
+    (repro.kernels); this jnp version is its oracle and the CPU path.
+    """
+    ok = U.validate(table, ring.region, ring.stag) & ring.live
+    width = ring.payload.shape[1]
+    lane = jnp.arange(width)[None, :]
+    elem_mask = ok[:, None] & (lane < ring.size[:, None])
+
+    # scatter rows into mem[region, offset:offset+width] where valid
+    # (sentinel = mem.size, out of range -> dropped; -1 would wrap)
+    dst_col = ring.offset[:, None] + lane
+    flat_idx = jnp.where(
+        elem_mask, ring.region[:, None] * mem.shape[1] + dst_col, mem.size
+    )
+    new_flat = mem.reshape(-1).at[flat_idx.reshape(-1)].set(
+        ring.payload.reshape(-1).astype(mem.dtype), mode="drop"
+    )
+    n_rejected = jnp.sum((ring.live & ~ok).astype(jnp.int32))
+    empty = ring._replace(live=jnp.zeros_like(ring.live))
+    return empty, new_flat.reshape(mem.shape), n_rejected

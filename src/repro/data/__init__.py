@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, MemmapSource, Pipeline, SyntheticSource
+
+__all__ = ["DataConfig", "MemmapSource", "Pipeline", "SyntheticSource"]

@@ -1,0 +1,156 @@
+"""Sharded, deterministic, restartable token pipeline.
+
+Sources
+-------
+* ``SyntheticSource`` — deterministic pseudo-text stream (hash of global
+  token index), so every (step, host) pair reproduces identical batches
+  with no files — used by smoke tests, dry-run-adjacent benches, examples.
+* ``MemmapSource``  — flat binary token file (np.memmap), the production
+  path: each host reads only its shard's byte range.
+
+Determinism & fault tolerance
+-----------------------------
+The pipeline is a pure function of (config, step): restart/resume needs no
+iterator state beyond the step counter already stored in checkpoints, and a
+straggling/preempted host re-reads exactly its shard. ``skip_to(step)``
+is O(1). A small background prefetch thread (double buffering) hides host
+read latency from the training loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    vocab: int
+    # sharding over hosts: this host handles [host_index, num_hosts)
+    num_hosts: int = 1
+    host_index: int = 0
+    seed: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+
+class SyntheticSource:
+    """Deterministic token stream: token[i] = splitmix-style hash of i."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        b, s = cfg.host_batch, cfg.seq_len
+        # global token offsets for this host's rows at this step
+        row0 = step * cfg.global_batch + cfg.host_index * b
+        rows = row0 + np.arange(b, dtype=np.int64)[:, None]
+        idx = rows * (s + 1) + np.arange(s + 1, dtype=np.int64)[None, :]
+        toks = _splitmix(idx + cfg.seed) % cfg.vocab
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+
+class MemmapSource:
+    """Flat int32 token file; rows are drawn round-robin over the file."""
+
+    def __init__(self, cfg: DataConfig, path: str):
+        self.cfg = cfg
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.n_rows = (len(self.tokens) - 1) // cfg.seq_len
+        if self.n_rows <= 0:
+            raise ValueError(f"{path}: too few tokens for seq_len={cfg.seq_len}")
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        b, s = cfg.host_batch, cfg.seq_len
+        row0 = step * cfg.global_batch + cfg.host_index * b
+        out_t = np.empty((b, s), np.int32)
+        out_l = np.empty((b, s), np.int32)
+        for i in range(b):
+            r = (row0 + i) % self.n_rows
+            chunk = self.tokens[r * s : r * s + s + 1]
+            out_t[i] = chunk[:-1]
+            out_l[i] = chunk[1:]
+        return {"tokens": out_t, "labels": out_l}
+
+
+def _splitmix(x: np.ndarray) -> np.ndarray:
+    """64-bit splitmix hash, vectorized (deterministic synthetic tokens)."""
+    x = (x.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return (x ^ (x >> np.uint64(31))).astype(np.int64)
+
+
+class Pipeline:
+    """Prefetching iterator over a source, restartable at any step."""
+
+    def __init__(self, source, start_step: int = 0, prefetch: int = 2):
+        self.source = source
+        self.step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _worker(self):
+        s = self.step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(s)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((s, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            s += 1
+
+    def start(self) -> "Pipeline":
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            # unblock a put() stuck on a full queue
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=2)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        if self._thread is None:
+            batch = self.source.batch_at(self.step)
+            self.step += 1
+            return batch
+        s, batch = self._q.get()
+        self.step = s + 1
+        return batch
+
+    def skip_to(self, step: int):
+        """O(1) resume: the source is a pure function of step."""
+        was_running = self._thread is not None
+        if was_running:
+            self.stop()
+            self._stop = threading.Event()
+            self._thread = None
+        self.step = step
+        if was_running:
+            self.start()

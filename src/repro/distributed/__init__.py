@@ -1,0 +1,23 @@
+from .sharding import (
+    attention_scheme,
+    batch_pspec,
+    cache_pspec,
+    dp_axes,
+    input_shardings,
+    param_pspec,
+    param_shardings,
+    state_shardings,
+    with_shardings,
+)
+
+__all__ = [
+    "attention_scheme",
+    "batch_pspec",
+    "cache_pspec",
+    "dp_axes",
+    "input_shardings",
+    "param_pspec",
+    "param_shardings",
+    "state_shardings",
+    "with_shardings",
+]

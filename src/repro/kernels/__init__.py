@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the compute hot-spots the paper's technique
+touches, each with a jit wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+  staged_scatter   the unload-path drain: staging ring -> destination pages
+                   (scalar-prefetched index map, aliased in-place update)
+  cms              count-min-sketch monitor update/query (decision hot path)
+  flash_attention  VMEM-tiled online-softmax prefill attention (GQA/SWA)
+  flash_decode     one-token attention over long KV caches (decode shapes)
+
+Kernels target TPU (BlockSpecs sized for VMEM, 128-lane tiles) and are
+validated on CPU with interpret=True against the oracles.
+"""
+from .ops import cms_query, cms_update, flash_attention, flash_decode, staged_scatter
+
+__all__ = [
+    "cms_query",
+    "cms_update",
+    "flash_attention",
+    "flash_decode",
+    "staged_scatter",
+]

@@ -1,0 +1,125 @@
+"""flash_attention — VMEM-tiled online-softmax attention (prefill hot spot).
+
+Classic FlashAttention adapted to TPU Pallas:
+
+* grid (B, Hq, S/BQ, T/BK) with the KV dimension innermost; the output
+  block (and the running max ``m``, denominator ``l``, accumulator ``acc``
+  scratch) is revisited across KV steps — VMEM-resident the whole time.
+* BQ/BK default to 128 (MXU-native tile edge); all matmuls run through
+  ``lax.dot_general`` with ``preferred_element_type=float32`` so bf16
+  inputs accumulate in fp32 on the MXU.
+* GQA is expressed in the INDEX MAP (kv head = q head // group): no
+  repeated-KV materialization in HBM, the same KV block is streamed for
+  all heads of a group.
+* causal + sliding-window masking by absolute position; masked lanes are
+  zeroed in the probability block (not just -inf'd) so fully-masked tiles
+  contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, bq, bk, n_kv, causal, window, q_offset, scale,
+):
+    i = pl.program_id(2)  # query block
+    j = pl.program_id(3)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]  # [BQ, D]
+    k = k_ref[0, 0]  # [BK, D]
+    v = v_ref[0, 0]
+
+    scores = lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BQ, BK]
+
+    # absolute positions: queries may sit at the end of the kv stream
+    qpos = i * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = j * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, _NEG_INF)
+
+    m_prev = m_ref[...]          # [BQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(mask, p, 0.0)  # fully-masked tiles contribute nothing
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    pv = lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = alpha * acc_ref[...] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, T, D]
+    v: jnp.ndarray,  # [B, Hkv, T, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    bq, bk = min(block_q, s), min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    n_kv = t // bk
+    q_offset = t - s  # queries aligned to the end of the KV stream
+
+    grid = (b, hq, s // bq, n_kv)
+    fn = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            bq=bq, bk=bk, n_kv=n_kv, causal=causal, window=window,
+            q_offset=q_offset, scale=d ** -0.5,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v)

@@ -1,0 +1,108 @@
+"""flash_decode — one-token attention against a long KV cache.
+
+The decode-shape hot spot (decode_32k / long_500k): a single query row per
+sequence attends over a 32k–512k-entry KV cache. The kernel streams the
+cache in BK-sized blocks, keeping the online-softmax state (m, l, acc) in
+VMEM; the cache layout is [B, T, Hkv, D] — the same layout the uRDMA write
+engine maintains — so no transpose materializes at decode time.
+
+Under shard_map with the cache sequence-sharded, each device runs this
+kernel over its local T-shard and the partial (acc, l, m) triples are
+combined with a 3-way psum-style log-sum-exp merge (see ops.flash_decode's
+``partial`` mode) — the flash-decode sequence-parallel pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, mask_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, bk, n_kv, scale, group,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]           # [1, D] single query row (kept 2D for the MXU)
+    k = k_ref[0, :, 0]     # [BK, D]
+    v = v_ref[0, :, 0]
+    valid = mask_ref[0] != 0  # [BK]
+
+    scores = lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [1, BK]
+    scores = jnp.where(valid[None, :], scores, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    pv = lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = alpha * acc_ref[...] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,        # [B, Hq, D]
+    k: jnp.ndarray,        # [B, T, Hkv, D]
+    v: jnp.ndarray,        # [B, T, Hkv, D]
+    kv_mask: jnp.ndarray,  # bool [B, T]
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    bk = min(block_k, t)
+    assert t % bk == 0, (t, bk)
+    n_kv = t // bk
+
+    grid = (b, hq, n_kv)
+    fn = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, bk=bk, n_kv=n_kv, scale=d ** -0.5, group=group
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, j: (b_, j, h // group, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, j: (b_, j, h // group, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h, j: (b_, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h, j: (b_, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v, kv_mask.astype(jnp.int32))

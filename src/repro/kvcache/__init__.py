@@ -1,0 +1,29 @@
+"""KV-cache substrate: dense caches with staged-ring overlay (unload path
+for decode writes) and a paged pool with page-frequency monitoring."""
+from .paged import (
+    PagedCache,
+    PageMonitor,
+    allocate_pages,
+    direct_insert,
+    gather_kv,
+    make_paged_cache,
+    write_destination,
+)
+from .staged import (
+    add_ring,
+    drain_ring,
+    maybe_drain,
+    overlay_kv,
+    overlay_masks,
+    ring_append,
+    ring_commit,
+    ring_full,
+    strip_ring,
+)
+
+__all__ = [
+    "PagedCache", "PageMonitor", "allocate_pages", "direct_insert",
+    "gather_kv", "make_paged_cache", "write_destination",
+    "add_ring", "drain_ring", "maybe_drain", "overlay_kv", "overlay_masks",
+    "ring_append", "ring_commit", "ring_full", "strip_ring",
+]

@@ -1,0 +1,117 @@
+"""Paged KV cache with uRDMA write-engine integration.
+
+Serving-grade cache layout: a global pool of fixed-size pages plus a per-
+sequence page table (vLLM-style, adapted to TPU: pages are dense
+[page_size, H, Dh] tiles so attention gathers whole pages, never elements).
+
+The WRITE side is where the paper lands: inserting a token's (k, v) into
+page ``page_table[seq, pos // page_size]`` is a write to an arbitrary
+destination page — direct scatter (offload) vs staging ring + bulk drain
+(unload), routed per-write by the decision module over page-frequency
+counters. This module provides the PAGE-GRANULAR destination mapping and
+the monitor plumbing; the ring mechanics are shared with
+``repro.kvcache.staged``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.monitor import ExactMonitor, MonitorState
+
+
+class PagedCache(NamedTuple):
+    pages_k: jnp.ndarray     # [n_pages, page_size, H, Dh]
+    pages_v: jnp.ndarray     # [n_pages, page_size, H, Dh]
+    page_table: jnp.ndarray  # int32 [B, max_pages_per_seq]
+    lengths: jnp.ndarray     # int32 [B] tokens written per sequence
+    n_allocated: jnp.ndarray  # int32 scalar — pages handed out so far
+
+
+def make_paged_cache(
+    n_pages: int, page_size: int, h: int, dh: int, batch: int,
+    max_pages_per_seq: int, dtype=jnp.float32,
+) -> PagedCache:
+    return PagedCache(
+        pages_k=jnp.zeros((n_pages, page_size, h, dh), dtype),
+        pages_v=jnp.zeros((n_pages, page_size, h, dh), dtype),
+        page_table=jnp.full((batch, max_pages_per_seq), -1, jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+        n_allocated=jnp.zeros((), jnp.int32),
+    )
+
+
+def allocate_pages(cache: PagedCache, seq_ids: jnp.ndarray) -> PagedCache:
+    """Give each listed sequence a fresh page if its current one is full.
+
+    Bump allocation from the global pool (a real deployment frees pages on
+    sequence retirement; eviction policy is out of scope here).
+    """
+    ps = cache.pages_k.shape[1]
+    need = (cache.lengths[seq_ids] % ps == 0)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    new_page = jnp.where(need, cache.n_allocated + rank, -1)
+    slot = cache.lengths[seq_ids] // ps
+    table = cache.page_table.at[seq_ids, slot].set(
+        jnp.where(need, new_page, cache.page_table[seq_ids, slot]), mode="drop"
+    )
+    return cache._replace(
+        page_table=table,
+        n_allocated=cache.n_allocated + jnp.sum(need.astype(jnp.int32)),
+    )
+
+
+def write_destination(cache: PagedCache, seq_ids: jnp.ndarray):
+    """(page id, row within page) for each sequence's next token."""
+    ps = cache.pages_k.shape[1]
+    pos = cache.lengths[seq_ids]
+    page = cache.page_table[seq_ids, pos // ps]
+    return page, pos % ps
+
+
+def direct_insert(
+    cache: PagedCache,
+    seq_ids: jnp.ndarray,   # int32 [n]
+    k_new: jnp.ndarray,     # [n, H, Dh]
+    v_new: jnp.ndarray,
+) -> PagedCache:
+    """Offload path: scatter each token straight into its page."""
+    page, row = write_destination(cache, seq_ids)
+    pk = cache.pages_k.at[page, row].set(k_new.astype(cache.pages_k.dtype), mode="drop")
+    pv = cache.pages_v.at[page, row].set(v_new.astype(cache.pages_v.dtype), mode="drop")
+    lengths = cache.lengths.at[seq_ids].add(1)
+    return cache._replace(pages_k=pk, pages_v=pv, lengths=lengths)
+
+
+def gather_kv(cache: PagedCache, seq_id: jnp.ndarray, max_len: int):
+    """Assemble one sequence's [max_len, H, Dh] kv view + validity mask."""
+    ps = cache.pages_k.shape[1]
+    n_slots = max_len // ps
+    pages = cache.page_table[seq_id, :n_slots]  # [n_slots]
+    k = cache.pages_k[jnp.maximum(pages, 0)]    # [n_slots, ps, H, Dh]
+    v = cache.pages_v[jnp.maximum(pages, 0)]
+    k = k.reshape(max_len, *k.shape[2:])
+    v = v.reshape(max_len, *v.shape[2:])
+    valid = (jnp.arange(max_len) < cache.lengths[seq_id]) & jnp.repeat(
+        pages >= 0, ps
+    )
+    return k, v, valid
+
+
+class PageMonitor(NamedTuple):
+    """Page-frequency counters — the decision module's monitor for KV writes."""
+
+    state: MonitorState
+
+    @staticmethod
+    def create(n_pages: int) -> "PageMonitor":
+        return PageMonitor(ExactMonitor(n_pages).init())
+
+    def update(self, n_pages: int, pages: jnp.ndarray) -> "PageMonitor":
+        mon = ExactMonitor(n_pages)
+        return PageMonitor(mon.update(self.state, pages))
+
+    def counts(self) -> jnp.ndarray:
+        return self.state.counts

@@ -1,0 +1,156 @@
+"""Staged KV-cache writes: the unload path for decode-time KV insertion.
+
+Decode writes one (k, v) tile per layer per step into an arbitrary slot of a
+large cache — the RDMA-write analogue (random destination page). Three
+write paths, mirroring the paper:
+
+* DIRECT (offload): ``transformer.direct_kv_write`` — per-sequence dynamic
+  scatter straight into the big cache. Fine when slots are "hot" (the same
+  pages being appended step after step keep their translations/layout warm);
+  on TPU each step costs a scattered dynamic-update-slice over the huge
+  cache buffer.
+* STAGED (unload): append the new tiles into a small RING overlay
+  [L, B, R, H, Dh] (sequential, dense, VMEM-resident-scale). Attention reads
+  cache ∪ ring (concatenated along the sequence axis with a validity mask —
+  no correctness gap while entries are staged). Every R steps the ring is
+  DRAINED into the main cache with one regular bulk copy
+  (``kernels.staged_scatter``) — R scattered writes become 1 dense copy.
+* ADAPTIVE: the decision module (page-frequency counters over destination
+  pages) picks per-sequence: hot pages direct, cold staged.
+
+State lives in the cache pytree so the whole thing jits and scans.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import staged_scatter
+
+Cache = Dict[str, jnp.ndarray]
+
+
+def add_ring(cache: Cache, ring_size: int) -> Cache:
+    """Extend a dense KV cache {k, v: [L, B, S, H, Dh]} with a staging ring."""
+    l, b, s, h, dh = cache["k"].shape
+    r = ring_size
+    return dict(
+        cache,
+        ring_k=jnp.zeros((l, b, r, h, dh), cache["k"].dtype),
+        ring_v=jnp.zeros((l, b, r, h, dh), cache["v"].dtype),
+        ring_slot=jnp.full((b, r), -1, jnp.int32),  # main-cache slot per entry
+        ring_fill=jnp.zeros((), jnp.int32),         # entries staged so far
+    )
+
+
+def strip_ring(cache: Cache) -> Cache:
+    return {k: v for k, v in cache.items() if not k.startswith("ring_")}
+
+
+def ring_append(cache: Cache, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                layer_idx: jnp.ndarray, slots: jnp.ndarray) -> Cache:
+    """Append one layer's new KV tile at the ring cursor (during scan,
+    ``layer_idx`` selects the ring plane; cursor advances once per step via
+    ``ring_commit``)."""
+    k_new, v_new = layer_kv  # [B, 1, H, Dh]
+    cur = cache["ring_fill"]
+    cache = dict(cache)
+    cache["ring_k"] = lax.dynamic_update_slice(
+        cache["ring_k"], k_new[None], (layer_idx, 0, cur, 0, 0)
+    )
+    cache["ring_v"] = lax.dynamic_update_slice(
+        cache["ring_v"], v_new[None], (layer_idx, 0, cur, 0, 0)
+    )
+    return cache
+
+
+def ring_commit(cache: Cache, slots: jnp.ndarray) -> Cache:
+    """Record destination slots for this step's entries and advance cursor."""
+    cur = cache["ring_fill"]
+    cache = dict(cache)
+    cache["ring_slot"] = lax.dynamic_update_slice(
+        cache["ring_slot"], slots[:, None], (0, cur)
+    )
+    cache["ring_fill"] = cur + 1
+    return cache
+
+
+def ring_full(cache: Cache) -> jnp.ndarray:
+    return cache["ring_fill"] >= cache["ring_slot"].shape[1]
+
+
+def drain_ring(cache: Cache, use_kernel: bool = True) -> Cache:
+    """Bulk-copy all staged entries to their main-cache slots, empty ring.
+
+    The copy is the staged_scatter drain: per (layer, batch), ring rows
+    [R, H*Dh] land at rows ``ring_slot[b]`` of the cache's [S, H*Dh] view.
+    """
+    l, b, r, h, dh = cache["ring_k"].shape
+    s = cache["k"].shape[2]
+    valid = (jnp.arange(r) < cache["ring_fill"])[None, :] & (cache["ring_slot"] >= 0)
+
+    def drain_one(dest, staging, slots, ok):
+        # dest [S, H, Dh]; staging [R, H, Dh]
+        if use_kernel:
+            out = staged_scatter(
+                dest.reshape(s, h * dh), staging.reshape(r, h * dh), slots, ok
+            )
+            return out.reshape(s, h, dh)
+        idx = jnp.where(ok, slots, s)
+        return dest.at[idx].set(staging, mode="drop", unique_indices=True)
+
+    def drain_layer(dest_l, staging_l):
+        return jax.vmap(drain_one, in_axes=(0, 0, 0, 0))(
+            dest_l, staging_l, cache["ring_slot"], valid
+        )
+
+    new_k = jax.vmap(drain_layer)(cache["k"], cache["ring_k"])
+    new_v = jax.vmap(drain_layer)(cache["v"], cache["ring_v"])
+    return dict(
+        cache,
+        k=new_k,
+        v=new_v,
+        ring_slot=jnp.full_like(cache["ring_slot"], -1),
+        ring_fill=jnp.zeros((), jnp.int32),
+    )
+
+
+def maybe_drain(cache: Cache, use_kernel: bool = False) -> Cache:
+    """Fixed-shape conditional drain (serve-loop safe)."""
+    return lax.cond(
+        ring_full(cache),
+        lambda c: drain_ring(c, use_kernel=use_kernel),
+        lambda c: dict(c),
+        cache,
+    )
+
+
+def overlay_masks(cache: Cache, base_mask: jnp.ndarray) -> jnp.ndarray:
+    """Validity mask for attention over [cache ∪ ring].
+
+    base_mask: bool [B, S] for the main cache. Staged entries are valid up
+    to ring_fill; their main-cache slots must be EXCLUDED from the base mask
+    (the authoritative value lives in the ring until drained).
+    """
+    b, s = base_mask.shape
+    r = cache["ring_slot"].shape[1]
+    fill = cache["ring_fill"]
+    ring_valid = (jnp.arange(r)[None, :] < fill) & (cache["ring_slot"] >= 0)
+    # exclude undrained slots from the main mask
+    slot_oh = jax.nn.one_hot(
+        jnp.where(ring_valid, cache["ring_slot"], s), s + 1, dtype=jnp.bool_
+    )[..., :s]  # [B, R, S]
+    shadowed = jnp.any(slot_oh, axis=1)
+    return jnp.concatenate([base_mask & ~shadowed, ring_valid], axis=1)
+
+
+def overlay_kv(cache: Cache, layer_k: jnp.ndarray, layer_v: jnp.ndarray,
+               ring_k: jnp.ndarray, ring_v: jnp.ndarray):
+    """Concatenate main-cache and ring KV along the sequence axis."""
+    return (
+        jnp.concatenate([layer_k, ring_k], axis=1),
+        jnp.concatenate([layer_v, ring_v], axis=1),
+    )

@@ -1,0 +1,171 @@
+"""Dry-run cell builders: (arch x shape) -> (step_fn, sharded abstract args).
+
+Shared by launch/dryrun.py (full-depth compile: memory + compilability) and
+launch/roofline.py (depth-reduced unrolled probes: exact FLOP/byte/collective
+accounting). Nothing here allocates device memory — all inputs are
+ShapeDtypeStructs with NamedShardings attached.
+
+Step kinds:
+  train    -> make_train_step (grad-accum microbatches, remat, AdamW)
+  prefill  -> chunk_prefill of the LAST chunk (worst case: queries attend
+              the full 32k cache). Chunked prefill is the production path
+              at 32k — one-shot prefill would materialize O(S^2) scores.
+  decode   -> decode_step (one new token against a seq_len KV cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..distributed import input_shardings, state_shardings, with_shardings
+from ..models import build_model, input_specs, media_spec, needs_media
+from ..optim import AdamW, warmup_cosine
+from ..train import TrainState, init_train_state, make_train_step
+
+# per-arch microbatch count for the train_4k cell (global batch 256):
+# bounds activation/dispatch memory; tuned from memory_analysis.
+TRAIN_MICROBATCHES = {
+    "default": 8,
+    "qwen2-7b": 16,
+    "granite-moe-3b-a800m": 16,
+    "qwen3-moe-235b-a22b": 16,
+    "llama-3.2-vision-90b": 16,
+    "nemotron-4-15b": 16,
+    "whisper-medium": 16,
+    "zamba2-2.7b": 16,
+}
+
+# chunk size for the prefill cells (memory/agility trade; tuned per arch —
+# qwen2's headdim-TP keeps full head count on each shard, so smaller chunks)
+PREFILL_CHUNK = {
+    "default": 1024,
+    "qwen2-7b": 512,
+}
+
+
+def _n_hot(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_experts // 4) if cfg.n_experts else 0
+
+
+def make_optimizer(total_steps: int = 10_000) -> AdamW:
+    return AdamW(lr=warmup_cosine(3e-4, 200, total_steps))
+
+
+def abstract_train_state(cfg: ModelConfig, model, opt: AdamW, max_seq: int):
+    return jax.eval_shape(
+        lambda k: init_train_state(model, opt, k, max_seq, n_hot_experts=_n_hot(cfg)),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    unroll: bool = False,
+    microbatches: Optional[int] = None,
+    dispatch_mode: str = "staged",
+) -> Tuple[Any, Tuple, Dict]:
+    """-> (step_fn, args (sharded ShapeDtypeStructs), meta)."""
+    kwargs = {"unroll": unroll}
+    if cfg.n_experts:
+        kwargs["dispatch_mode"] = dispatch_mode
+    model = build_model(cfg, **kwargs)
+    specs = input_specs(cfg, shape)
+    meta: Dict[str, Any] = {"arch": cfg.name, "shape": shape.name, "step": shape.step}
+
+    if shape.step == "train":
+        mb = microbatches or TRAIN_MICROBATCHES.get(
+            cfg.name, TRAIN_MICROBATCHES["default"]
+        )
+        meta["microbatches"] = mb
+        opt = make_optimizer()
+        step = make_train_step(
+            model, opt, microbatches=mb, remat=True, n_hot_experts=_n_hot(cfg),
+            unroll_accum=unroll,
+        )
+        a_state = abstract_train_state(cfg, model, opt, shape.seq_len)
+        s_state = with_shardings(a_state, state_shardings(cfg, mesh, a_state))
+        s_batch = input_shardings(cfg, mesh, specs, "train")
+        return step, (s_state, s_batch), meta
+
+    # serving cells share the param shardings of training (FSDP+TP)
+    from ..distributed import param_shardings
+
+    a_params = jax.eval_shape(
+        lambda k: model.init(k, shape.seq_len), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    s_params = with_shardings(a_params, param_shardings(cfg, mesh, a_params))
+
+    if shape.step == "prefill":
+        chunk = PREFILL_CHUNK.get(cfg.name, PREFILL_CHUNK["default"])
+        chunk = min(chunk, shape.seq_len)
+        meta["chunk"] = chunk
+        start = shape.seq_len - chunk  # last chunk = worst case
+        b = shape.global_batch
+        cache = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len, jnp.dtype(cfg.dtype))
+        )
+        tok = jax.ShapeDtypeStruct((b, chunk), jnp.int32)
+        args = {"cache": cache, "tokens": tok}
+        if needs_media(cfg):
+            args["media"] = media_spec(cfg, b, jnp.dtype(cfg.dtype))
+        s_args = input_shardings(cfg, mesh, args, "prefill")
+
+        def step(params, cache, tokens, media=None):
+            return model.chunk_prefill(params, cache, tokens, start, media=media)
+
+        return step, (s_params, s_args["cache"], s_args["tokens"],
+                      s_args.get("media")), meta
+
+    if shape.step == "decode":
+        s_args = input_shardings(cfg, mesh, specs, "decode")
+
+        def step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos)
+
+        return step, (s_params, s_args["cache"], s_args["tokens"], s_args["pos"]), meta
+
+    raise ValueError(shape.step)
+
+
+def depth_probes(cfg: ModelConfig) -> list:
+    """Depth knobs for the affine roofline probes (see launch/roofline.py).
+
+    Returns a list of (label, replace_kwargs, depth_value) — cost is affine
+    in each depth knob; two probes give base + marginal.
+    """
+    if cfg.family == "vlm":
+        g = cfg.cross_attn_every
+        return [("d", {"n_layers": g}, 1), ("d", {"n_layers": 2 * g}, 2)]
+    if cfg.family == "hybrid":
+        g = cfg.hybrid_attn_every
+        return [("d", {"n_layers": g}, 1), ("d", {"n_layers": 2 * g}, 2)]
+    if cfg.family == "encdec":
+        return [
+            ("d", {"n_layers": 1, "n_enc_layers": 1}, (1, 1)),
+            ("d", {"n_layers": 2, "n_enc_layers": 1}, (2, 1)),
+            ("enc", {"n_layers": 1, "n_enc_layers": 2}, (1, 2)),
+        ]
+    return [("d", {"n_layers": 1}, 1), ("d", {"n_layers": 2}, 2)]
+
+
+def probe_config(cfg: ModelConfig, replace_kwargs: dict) -> ModelConfig:
+    return dataclasses.replace(cfg, **replace_kwargs)
+
+
+def full_depth_units(cfg: ModelConfig):
+    """How many 'depth units' the full config has, matching depth_probes."""
+    if cfg.family == "vlm":
+        return cfg.n_layers // cfg.cross_attn_every
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_every
+    if cfg.family == "encdec":
+        return (cfg.n_layers, cfg.n_enc_layers)
+    return cfg.n_layers

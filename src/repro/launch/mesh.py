@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device query, and tests/benches must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod stacks 2 pods -> 512 chips.
+
+    Axis roles: "pod" = cross-pod data parallelism (gradient all-reduce над
+    the DCN/ICI boundary), "data" = FSDP + batch DP, "model" = TP/EP.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU tests/examples (axis names preserved)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

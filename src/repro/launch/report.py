@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from ..configs import ALL_SHAPES, ARCHS
+
+
+def load(dirname):
+    recs = {}
+    for fname in sorted(os.listdir(dirname)):
+        if fname.endswith(".json"):
+            with open(os.path.join(dirname, fname)) as f:
+                r = json.load(f)
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+
+    print("### §Dry-run: compile + memory per (arch x shape), both meshes\n")
+    print("| arch | shape | status | mem/dev 1-pod (GB) | mem/dev 2-pod (GB) "
+          "| compile 1-pod (s) | compile 2-pod (s) |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in ALL_SHAPES:
+            r = recs.get((arch, shape.name))
+            if r is None:
+                print(f"| {arch} | {shape.name} | MISSING | | | | |")
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape.name} | skipped* | | | | |")
+                continue
+            if r["status"] == "error":
+                print(f"| {arch} | {shape.name} | ERROR | | | | |")
+                continue
+            sp, mp = r["single_pod"], r["multi_pod"]
+            print(f"| {arch} | {shape.name} | ok | {sp['per_device_gb']} | "
+                  f"{mp['per_device_gb']} | {sp['compile_s']} | {mp['compile_s']} |")
+
+    print("\n### §Roofline: per-device terms (single-pod 16x16, 256 chips)\n")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "dominant | model-FLOPs ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in ALL_SHAPES:
+            r = recs.get((arch, shape.name))
+            if not r or r["status"] != "ok" or "roofline" not in r:
+                continue
+            t = r["roofline"]
+            print(f"| {arch} | {shape.name} | {fmt_ms(t['compute_s'])} | "
+                  f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+                  f"{t['dominant']} | {t['model_flops_ratio']:.2f} | "
+                  f"{t['roofline_fraction']:.3f} |")
+
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"\ncells: {n_ok} ok / {n_skip} skipped (documented) / {n_err} error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs under multi-controller JAX (one process per
+host; jax.distributed.initialize() from the scheduler environment); in this
+container it runs single-process on CPU with the reduced config by default.
+The full production path (mesh, shardings, microbatching, checkpoints,
+fault tolerance) is identical either way — only device count differs.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from ..configs import get_config
+from ..data import DataConfig, Pipeline, SyntheticSource
+from ..distributed import state_shardings, with_shardings
+from ..models import build_model
+from ..optim import AdamW, warmup_cosine
+from ..train import Trainer, TrainerConfig, init_train_state, make_train_step
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="CPU-scale config (full configs need TPUs)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--dispatch-mode", default="staged",
+                    choices=("direct", "staged", "adaptive"))
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    kwargs = {"dispatch_mode": args.dispatch_mode} if cfg.n_experts else {}
+    model = build_model(cfg, **kwargs)
+    n_hot = max(1, cfg.n_experts // 4) if cfg.n_experts else 0
+
+    opt = AdamW(lr=warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps))
+    state = init_train_state(model, opt, jax.random.key(0), args.seq, n_hot)
+    step_fn = make_train_step(model, opt, microbatches=args.microbatches,
+                              n_hot_experts=n_hot)
+
+    if len(jax.devices()) > 1:
+        mesh = make_production_mesh()
+        a_state = jax.eval_shape(lambda s: s, state)
+        sh = state_shardings(cfg, mesh, a_state)
+        state = jax.tree.map(jax.device_put, state, sh)
+        with mesh:
+            step = jax.jit(step_fn, donate_argnums=0)
+    else:
+        step = jax.jit(step_fn, donate_argnums=0)
+
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch, vocab=cfg.vocab,
+                    num_hosts=jax.process_count(), host_index=jax.process_index())
+    pipe = Pipeline(SyntheticSource(dc)).start()
+    trainer = Trainer(step, state, pipe, TrainerConfig(
+        total_steps=args.steps,
+        checkpoint_every=max(args.steps // 4, 1),
+        checkpoint_dir=args.checkpoint_dir,
+    ))
+    trainer.maybe_resume()
+    result = trainer.run()
+    pipe.stop()
+    print(f"done: {result}")
+
+
+if __name__ == "__main__":
+    main()

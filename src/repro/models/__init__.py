@@ -1,0 +1,11 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM families with a
+unified init/loss/prefill/decode API and uRDMA write-engine hooks."""
+from .model import abstract_params, build_model, input_specs, media_spec, needs_media
+
+__all__ = [
+    "abstract_params",
+    "build_model",
+    "input_specs",
+    "media_spec",
+    "needs_media",
+]

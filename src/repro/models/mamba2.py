@@ -1,0 +1,343 @@
+"""Mamba2 / SSD (state-space duality) blocks. [arXiv:2405.21060]
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is
+evaluated as masked (attention-like) matmuls — MXU-friendly; across chunks a
+sequential state recurrence carries [B, H, P, N] states. Decode keeps an
+O(1) recurrent state + a depthwise-conv tail, which is what makes the
+``long_500k`` shape runnable for SSM/hybrid archs.
+
+Shapes: x [B, S, H, P] (P = head channels), dt [B, S, H], A [H],
+B/C [B, S, G, N] (G groups broadcast over H heads), state [B, H, P, N].
+All decay math in float32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, d_in = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = d_in + 2 * g * n
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "ln": L.init_norm(cfg),
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * d ** -0.5).astype(
+            jnp.float32
+        ),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(
+            jnp.float32
+        ),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A in [-16, -1]
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ~ 0.12
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),  # gated RMSNorm scale
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(
+            jnp.float32
+        ),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_in, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, x, bb, cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + g * n, 2 * d_in + 2 * g * n], axis=-1
+    )
+    return z, x, bb, cc, dt
+
+
+def _expand_groups(v: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[..., G, N] -> [..., H, N] broadcast of B/C groups over heads."""
+    g = v.shape[-2]
+    if g == n_heads:
+        return v
+    return jnp.repeat(v, n_heads // g, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Cumulative segment sums: out[..., i, j] = sum_{k=j+1..i} a[..., k]
+    for i >= j, else -inf. a: [..., Q] -> [..., Q, Q]."""
+    q = a.shape[-1]
+    x = jnp.broadcast_to(a[..., :, None], a.shape + (q,))  # [..., d(src k), e]
+    lower = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    x = jnp.where(lower, x, 0.0)
+    out = jnp.cumsum(x, axis=-2)
+    keep = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(keep, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a full sequence. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    x [B,S,H,P]; dt [B,S,H] (already softplus'd); A [H] (negative);
+    B/C [B,S,G,N].
+    """
+    b, s, h, p = x.shape
+    orig_s = s
+    if s % chunk:
+        # zero-pad to a chunk multiple: dt==0 makes padded steps identity
+        # transitions (decay exp(0)=1, contribution 0), so the final state
+        # is exact; padded outputs are sliced off below.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = x.shape[1]
+    nc, q = s // chunk, chunk
+    n = B.shape[-1]
+
+    Bh = _expand_groups(B, h)  # [B,S,H,N]
+    Ch = _expand_groups(C, h)
+
+    # chunked views
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = Bh.reshape(b, nc, q, h, n)
+    Cc = Ch.reshape(b, nc, q, h, n)
+
+    a = dtc * A  # [b,nc,q,h] (negative decays)
+    a_hq = jnp.moveaxis(a, -1, -2)  # [b,nc,h,q]
+    a_cum = jnp.cumsum(a_hq, axis=-1)  # [b,nc,h,q]
+
+    # keep the data path in the compute dtype (decay math stays f32);
+    # mixing them would promote the scan carry to f32 vs the bf16 init
+    xdt = xc * dtc[..., None].astype(xc.dtype)  # x * dt
+
+    # 1) intra-chunk (diagonal blocks): masked attention-like matmuls
+    Lmat = jnp.exp(segsum(a_hq))  # [b,nc,h,q,q]
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)  # [b,nc,h,q,q]
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Lmat.astype(scores.dtype), xdt)
+
+    # 2) chunk states: decayed sum of inputs within each chunk
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # [b,nc,h,q]
+    states = jnp.einsum(
+        "bcshn,bchs,bcshp->bchpn", Bc, decay_states.astype(x.dtype), xdt
+    )  # [b,nc,h,p,n]
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])  # [b,nc,h]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), x.dtype)
+
+    def body(prev, xs):
+        st, dec = xs  # [b,h,p,n], [b,h]
+        entered = prev  # state entering this chunk
+        new = st + dec[..., None, None].astype(st.dtype) * prev
+        return new, entered
+
+    states_t = jnp.moveaxis(states, 1, 0)  # [nc,b,h,p,n]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # [nc,b,h]
+    final_state, prev_states = lax.scan(body, init_state, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [b,nc,h,p,n]
+
+    # 4) inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(a_cum)  # [b,nc,h,q]
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bchl->bclhp", Cc, prev_states, state_decay_out.astype(x.dtype)
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y[:, :orig_s], final_state
+
+
+def ssd_decode_step(
+    x_t: jnp.ndarray,
+    dt_t: jnp.ndarray,
+    A: jnp.ndarray,
+    B_t: jnp.ndarray,
+    C_t: jnp.ndarray,
+    state: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. x_t [B,H,P]; dt_t [B,H]; B_t/C_t [B,G,N];
+    state [B,H,P,N] -> (y [B,H,P], new_state)."""
+    h = x_t.shape[1]
+    Bh = _expand_groups(B_t, h)  # [B,H,N]
+    Ch = _expand_groups(C_t, h)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A).astype(state.dtype)  # [B,H]
+    xdt = x_t * dt_t[..., None].astype(x_t.dtype)
+    new_state = state * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Conv + full block
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(
+    xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+    left_context: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc [B, S, Ch]; w [W, Ch].
+
+    ``left_context`` [B, W-1, Ch]: previous chunk's tail (chunked prefill);
+    zeros when starting from scratch."""
+    width = w.shape[0]
+    if left_context is None:
+        pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([left_context.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(width):  # width is tiny (4): unrolled taps
+        out = out + pad[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+    return jax.nn.silu(out + bias.astype(xbc.dtype))
+
+
+def conv_decode_step(
+    tail: jnp.ndarray, xbc_t: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tail [B, W-1, Ch] (previous inputs), xbc_t [B, Ch] -> (out [B, Ch], new tail)."""
+    window = jnp.concatenate([tail, xbc_t[:, None]], axis=1)  # [B, W, Ch]
+    out = jnp.einsum("bwc,wc->bc", window, w.astype(xbc_t.dtype))
+    out = jax.nn.silu(out + bias.astype(xbc_t.dtype))
+    return out, window[:, 1:]
+
+
+def gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray, eps: float):
+    """Mamba2 output norm: RMSNorm(y * silu(z)) * scale."""
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def mamba_block(
+    cfg: ModelConfig, p: Params, u: jnp.ndarray, init_state=None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence mamba2 block. u [B, S, D] ->
+    (out [B,S,D], final ssm state [B,H,P,N], conv tail [B,W-1,Ch])."""
+    dtype = u.dtype
+    h, pd, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    res = u
+    x = L.apply_norm(cfg, p["ln"], u)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dtype))
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_tail = xbc[:, -(cfg.ssm_conv - 1):]  # pre-conv inputs feed decode
+    xbc = causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bb, cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    b, s, _ = u.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(
+        xs.reshape(b, s, h, pd),
+        dt,
+        A,
+        bb.reshape(b, s, g, n),
+        cc.reshape(b, s, g, n),
+        cfg.ssm_chunk,
+        init_state,
+    )
+    y = y + p["D"].astype(dtype)[None, None, :, None] * xs.reshape(b, s, h, pd)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = gated_rmsnorm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dtype))
+    return res + out, final_state, conv_tail
+
+
+def mamba_block_chunk(
+    cfg: ModelConfig,
+    p: Params,
+    u: jnp.ndarray,           # [B, C, D] one chunk
+    ssm_state: jnp.ndarray,   # [B, H, P, N] state entering the chunk
+    conv_tail: jnp.ndarray,   # [B, W-1, Ch] previous chunk's pre-conv tail
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked-prefill mamba block: carries conv + SSD state across chunks."""
+    dtype = u.dtype
+    h, pd, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    res = u
+    x = L.apply_norm(cfg, p["ln"], u)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dtype))
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)
+    new_tail = jnp.concatenate([conv_tail.astype(dtype), xbc], axis=1)[
+        :, -(cfg.ssm_conv - 1):
+    ]
+    xbc = causal_conv(xbc, p["conv_w"], p["conv_b"], left_context=conv_tail)
+    xs, bb, cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    b, s, _ = u.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(
+        xs.reshape(b, s, h, pd), dt, A,
+        bb.reshape(b, s, g, n), cc.reshape(b, s, g, n),
+        cfg.ssm_chunk, init_state=ssm_state,
+    )
+    y = y + p["D"].astype(dtype)[None, None, :, None] * xs.reshape(b, s, h, pd)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = gated_rmsnorm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dtype))
+    return res + out, final_state, new_tail
+
+
+def mamba_decode_step(
+    cfg: ModelConfig,
+    p: Params,
+    u_t: jnp.ndarray,
+    ssm_state: jnp.ndarray,
+    conv_tail: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token step. u_t [B, D]; ssm_state [B,H,P,N]; conv_tail [B,W-1,Ch].
+
+    Returns (out [B, D], new ssm_state, new conv_tail)."""
+    dtype = u_t.dtype
+    h, pd, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    res = u_t
+    x = L.apply_norm(cfg, p["ln"], u_t[:, None])[:, 0]
+    zxbcdt = jnp.einsum("bd,dk->bk", x, p["in_proj"].astype(dtype))
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc_t = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_tail = conv_decode_step(conv_tail, xbc_t, p["conv_w"], p["conv_b"])
+    xs, bb, cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    b = u_t.shape[0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_decode_step(
+        xs.reshape(b, h, pd), dt, A, bb.reshape(b, g, n), cc.reshape(b, g, n), ssm_state
+    )
+    y = y + p["D"].astype(dtype)[None, :, None] * xs.reshape(b, h, pd)
+    y = y.reshape(b, cfg.d_inner)
+    y = gated_rmsnorm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(dtype))
+    return res + out, ssm_state, conv_tail
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    """Per-layer recurrent state template (stacked over layers by callers)."""
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }

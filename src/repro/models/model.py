@@ -1,0 +1,96 @@
+"""Unified model façade: ``build_model(cfg)`` + abstract input specs.
+
+Every family exposes the same surface:
+    model.init(key, max_seq)                 -> params
+    model.loss(params, batch)                -> scalar (train objective)
+    model.prefill(params, tokens, max_seq, media=...) -> (logits, cache)
+    model.decode_step(params, cache, tokens, pos, kv_writer=...) -> (logits, cache)
+    model.init_cache(batch, max_seq)         -> cache pytree
+
+``input_specs(cfg, shape)`` produces jax.ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) dry-run cell — weak-type-correct, shardable,
+zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ENCDEC, HYBRID, MOE, SSM, VLM, ModelConfig, ShapeSpec
+from .moe_lm import MoELM
+from .ssm_lm import MambaLM, ZambaLM
+from .transformer import DecoderLM
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig, **kwargs):
+    """Family dispatch. kwargs: e.g. dispatch_mode for MoE."""
+    if cfg.family == MOE:
+        return MoELM(cfg, **kwargs)
+    if cfg.family == SSM:
+        return MambaLM(cfg, **kwargs)
+    if cfg.family == HYBRID:
+        return ZambaLM(cfg, **kwargs)
+    if cfg.family == ENCDEC:
+        return WhisperModel(cfg, **kwargs)
+    # dense + vlm share DecoderLM (vlm via cfg.cross_attn_every)
+    return DecoderLM(cfg, **kwargs)
+
+
+def media_spec(cfg: ModelConfig, batch: int, dtype) -> jax.ShapeDtypeStruct:
+    """Stub frontend embeddings: VLM patch tokens / whisper audio frames."""
+    if cfg.family == VLM:
+        return jax.ShapeDtypeStruct((batch, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.family == ENCDEC:
+        return jax.ShapeDtypeStruct((batch, cfg.n_audio_frames, cfg.d_model), dtype)
+    raise ValueError(f"{cfg.name} has no media input")
+
+
+def needs_media(cfg: ModelConfig) -> bool:
+    return cfg.family in (VLM, ENCDEC)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for one dry-run cell (no device allocation).
+
+    train:   {tokens, labels[, media]}
+    prefill: {tokens[, media]}
+    decode:  {tokens [B], pos [B], cache (pytree of specs)}
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    if shape.step == "train":
+        specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if needs_media(cfg):
+            specs["media"] = media_spec(cfg, b, dtype)
+        return specs
+
+    if shape.step == "prefill":
+        specs = {"tokens": tok}
+        if needs_media(cfg):
+            specs["media"] = media_spec(cfg, b, dtype)
+        return specs
+
+    if shape.step == "decode":
+        model = build_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(b, s, dtype))
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "cache": cache,
+        }
+
+    raise ValueError(shape.step)
+
+
+def abstract_params(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct pytree of params for a cell (via eval_shape)."""
+    model = build_model(cfg)
+    max_seq = shape.seq_len
+    return jax.eval_shape(
+        lambda k: model.init(k, max_seq), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )

@@ -1,0 +1,32 @@
+"""Scan-or-unroll switch for layer stacks.
+
+Models run their layer stacks under ``lax.scan`` by default (O(1) HLO in
+depth — required for fast compiles at 100 layers and the 40-cell dry-run).
+The roofline prober flips to ``unroll=True`` on depth-reduced configs
+because ``compiled.cost_analysis()`` counts a while-loop body ONCE — see
+launch/roofline.py for the affine-probe methodology this enables.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def python_scan(body, carry, xs):
+    """Drop-in for lax.scan(body, carry, xs) with a python loop (unrolled HLO)."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and any(l is not None for l in jax.tree.leaves(ys[0], is_leaf=lambda x: x is None)):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def get_scan(unroll: bool):
+    return python_scan if unroll else lax.scan

@@ -1,0 +1,537 @@
+"""Decoder-only transformer stack (dense + VLM cross-attention variants).
+
+Structure
+---------
+* Parameters for repeated layers are STACKED along a leading layer axis and
+  the stack runs under ``lax.scan`` — HLO size is O(1) in depth, which keeps
+  the 40-cell dry-run (and real 1000-node compiles) tractable.
+* VLM (llama-3.2-vision style): every ``cross_attn_every``-th layer is a
+  gated cross-attention layer over (stub) image embeddings. The scan runs
+  over GROUPS of ``cross_attn_every`` layers: (every-1) self layers
+  (inner scan) + 1 cross layer.
+* The decode path takes a ``kv_writer`` (see ``repro.kvcache``) so KV-cache
+  insertion can be routed through the uRDMA write engine (direct scatter =
+  offload path, staged ring append + drain = unload path).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .scan import get_scan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_dense_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k2),
+    }
+
+
+def dense_block(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    mask: Optional[jnp.ndarray],
+) -> jnp.ndarray:
+    x = x + L.attention(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x), positions, mask=mask)
+    x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    return x
+
+
+def init_cross_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k2),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def cross_block(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, media: jnp.ndarray
+) -> jnp.ndarray:
+    """Gated cross-attention layer (llama-3.2-vision style)."""
+    h = L.attention(
+        cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x), positions=None,
+        kv_x=media, use_rope=False,
+    )
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+    h = L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * h
+    return x
+
+
+def stack_init(init_fn, key: jax.Array, n: int) -> Params:
+    """Initialize ``n`` blocks with independent keys, stacked on axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Decode-time KV handling
+# ---------------------------------------------------------------------------
+
+
+def direct_kv_write(kc, vc, k_new, v_new, slots):
+    """Default (offload-path) writer: per-sequence scatter.
+
+    kc/vc: [B, S, Hkv, Dh]; k_new/v_new: [B, 1, Hkv, Dh]; slots: int32 [B].
+    Out-of-range slots (>= S) are DROPPED — the adaptive path uses this to
+    suppress the main-cache write for staged sequences.
+    """
+    b = kc.shape[0]
+    rows = jnp.arange(b)
+    kc = kc.at[rows, slots].set(k_new[:, 0].astype(kc.dtype), mode="drop")
+    vc = vc.at[rows, slots].set(v_new[:, 0].astype(vc.dtype), mode="drop")
+    return kc, vc
+
+
+def cache_slots(cfg: ModelConfig, pos: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    """Ring addressing for SWA caches; linear otherwise."""
+    if cfg.sliding_window and cache_len <= cfg.sliding_window:
+        return (pos % cache_len).astype(jnp.int32)
+    return jnp.minimum(pos, cache_len - 1).astype(jnp.int32)
+
+
+def valid_mask(cfg: ModelConfig, pos: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    """bool [B, S]: which cache slots hold live keys after writing at ``pos``.
+
+    Linear cache: slots 0..pos. SWA ring: all slots once pos >= cache_len-1,
+    else slots 0..pos.
+    """
+    slot_ids = jnp.arange(cache_len)[None, :]
+    linear = slot_ids <= pos[:, None]
+    if cfg.sliding_window and cache_len <= cfg.sliding_window:
+        full = (pos[:, None] >= cache_len - 1)
+        return jnp.where(full, True, linear)
+    return linear
+
+
+# ---------------------------------------------------------------------------
+# DecoderLM: dense + VLM
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    """Dense decoder-only LM; with ``cfg.cross_attn_every`` also covers VLM."""
+
+    def __init__(self, cfg: ModelConfig, unroll: bool = False):
+        self.cfg = cfg
+        self._scan = get_scan(unroll)
+        self.is_vlm = cfg.cross_attn_every > 0
+        if self.is_vlm:
+            assert cfg.n_layers % cfg.cross_attn_every == 0
+            self.n_groups = cfg.n_layers // cfg.cross_attn_every
+            self.n_self_per_group = cfg.cross_attn_every - 1
+        else:
+            self.n_groups = cfg.n_layers
+            self.n_self_per_group = 1
+
+    # -- init ------------------------------------------------------------
+    def init(self, key: jax.Array, max_seq: int = 0) -> Params:
+        cfg = self.cfg
+        k_emb, k_blocks, k_cross = jax.random.split(key, 3)
+        params: Params = {"embed": L.init_embed(cfg, k_emb), "ln_f": L.init_norm(cfg)}
+        if self.is_vlm:
+            n_self = self.n_groups * self.n_self_per_group
+            params["blocks"] = stack_init(partial(init_dense_block, cfg), k_blocks, n_self)
+            params["cross_blocks"] = stack_init(
+                partial(init_cross_block, cfg), k_cross, self.n_groups
+            )
+        else:
+            params["blocks"] = stack_init(
+                partial(init_dense_block, cfg), k_blocks, cfg.n_layers
+            )
+        return params
+
+    # -- full forward (train / prefill) -----------------------------------
+    def _trunk(
+        self,
+        params: Params,
+        x: jnp.ndarray,
+        positions: jnp.ndarray,
+        media: Optional[jnp.ndarray],
+        remat: bool,
+    ) -> jnp.ndarray:
+        cfg = self.cfg
+        mask = L.causal_mask(x.shape[1], x.shape[1], cfg.sliding_window)
+
+        def self_body(carry, p):
+            return dense_block(cfg, p, carry, positions, mask), None
+
+        if remat:
+            self_body = jax.checkpoint(self_body, prevent_cse=False)
+
+        if not self.is_vlm:
+            x, _ = self._scan(self_body, x, params["blocks"])
+            return x
+
+        nspg = self.n_self_per_group
+        grouped = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, nspg) + a.shape[1:]), params["blocks"]
+        )
+
+        def group_body(carry, ps):
+            self_ps, cross_p = ps
+            h, _ = self._scan(self_body, carry, self_ps)
+            h = cross_block(cfg, cross_p, h, media)
+            return h, None
+
+        if remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        x, _ = self._scan(group_body, x, (grouped, params["cross_blocks"]))
+        return x
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,
+        media: Optional[jnp.ndarray] = None,
+        remat: bool = False,
+    ) -> jnp.ndarray:
+        """tokens [B, S] -> logits [B, S, V] (fp32)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed_tokens(cfg, params["embed"], tokens, dtype)
+        if media is not None:
+            media = media.astype(dtype)
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape
+        )
+        x = self._trunk(params, x, positions, media, remat)
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        return L.lm_logits(cfg, params["embed"], x)
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray], remat: bool = True):
+        logits = self.forward(params, batch["tokens"], batch.get("media"), remat=remat)
+        return L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+    # -- KV cache ----------------------------------------------------------
+    def cache_len(self, max_seq: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return min(max_seq, cfg.sliding_window)
+        return max_seq
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None) -> Params:
+        """Abstract-shape-friendly KV cache pytree."""
+        cfg = self.cfg
+        dims = L.attn_dims(cfg)
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        s = self.cache_len(max_seq)
+        n_layers = (
+            self.n_groups * self.n_self_per_group if self.is_vlm else cfg.n_layers
+        )
+        cache = {
+            "k": jnp.zeros((n_layers, batch, s, dims.n_kv_heads, dims.head_dim), dtype),
+            "v": jnp.zeros((n_layers, batch, s, dims.n_kv_heads, dims.head_dim), dtype),
+        }
+        if self.is_vlm:
+            cache["cross_k"] = jnp.zeros(
+                (self.n_groups, batch, cfg.n_image_tokens, dims.n_kv_heads, dims.head_dim),
+                dtype,
+            )
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    def prefill(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,
+        max_seq: int,
+        media: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Params]:
+        """Run the full prompt, build the cache, return last-token logits.
+
+        Dry-run note: prefill writes the whole prompt's KV in one dense slice
+        (the offload/direct path — prefill writes are contiguous, exactly the
+        case the paper keeps offloaded).
+        """
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(cfg, params["embed"], tokens, dtype)
+        if media is not None:
+            media = media.astype(dtype)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        mask = L.causal_mask(s, s, cfg.sliding_window)
+        cache = self.init_cache(b, max_seq, dtype)
+        clen = self.cache_len(max_seq)
+
+        def keep_ring(k):
+            """Last ``clen`` positions, placed at slot = pos % clen."""
+            if k.shape[1] < clen:
+                pad = [(0, 0), (0, clen - k.shape[1]), (0, 0), (0, 0)]
+                return jnp.pad(k, pad)
+            tail = k[:, -clen:]
+            shift = s % clen
+            return jnp.roll(tail, shift, axis=1) if shift else tail
+
+        def self_body(carry, p):
+            h = carry
+            hn = L.apply_norm(cfg, p["ln1"], h)
+            k, v = L.project_kv(cfg, p["attn"], hn, positions)
+            h = dense_block(cfg, p, h, positions, mask)
+            # keep the last `clen` positions (ring semantics for SWA)
+            return h, (keep_ring(k), keep_ring(v))
+
+        if not self.is_vlm:
+            x, (ks, vs) = self._scan(self_body, x, params["blocks"])
+            cache["k"], cache["v"] = ks, vs
+        else:
+            nspg = self.n_self_per_group
+            grouped = jax.tree.map(
+                lambda a: a.reshape((self.n_groups, nspg) + a.shape[1:]),
+                params["blocks"],
+            )
+
+            def group_body(carry, ps):
+                self_ps, cross_p = ps
+                h, kv = self._scan(self_body, carry, self_ps)
+                ck, cv = L.project_kv(cfg, cross_p["attn"], media, None)
+                h = cross_block(cfg, cross_p, h, media)
+                return h, (kv, (ck, cv))
+
+            x, (kv, cross_kv) = self._scan(group_body, x, (grouped, params["cross_blocks"]))
+            ks, vs = kv
+            cache["k"] = ks.reshape((-1,) + ks.shape[2:])
+            cache["v"] = vs.reshape((-1,) + vs.shape[2:])
+            cache["cross_k"], cache["cross_v"] = cross_kv
+
+        x = L.apply_norm(cfg, params["ln_f"], x[:, -1:])
+        logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
+        return logits, cache
+
+    # -- chunked prefill -----------------------------------------------------
+    def chunk_prefill(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jnp.ndarray,   # [B, C] one chunk
+        start_pos: int,        # static: absolute position of tokens[:, 0]
+        media: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Params]:
+        """Chunked prefill: process C prompt tokens against the running
+        cache (memory O(C * S) instead of O(S^2) — the prefill_32k path).
+
+        Chunk KV writes are dense slice updates — the offload/direct path;
+        the paper (and this engine) only unloads small scattered writes.
+        """
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        b, c = tokens.shape
+        x = L.embed_tokens(cfg, params["embed"], tokens, dtype)
+        if media is not None:
+            media = media.astype(dtype)
+        positions = jnp.broadcast_to(
+            start_pos + jnp.arange(c, dtype=jnp.int32), (b, c)
+        )
+        clen = cache["k"].shape[2]
+        spos = L.slot_positions(clen, start_pos + c - 1)
+
+        def self_body(carry, xs):
+            h = carry
+            p, kc, vc = xs
+            hn = L.apply_norm(cfg, p["ln1"], h)
+            k_new, v_new = L.project_kv(cfg, p["attn"], hn, positions)
+            kc = L.write_chunk(kc, k_new, start_pos)
+            vc = L.write_chunk(vc, v_new, start_pos)
+            h = h + L.chunk_attention(cfg, p["attn"], hn, positions, kc, vc, spos)
+            h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+            return h, (kc, vc)
+
+        if not self.is_vlm:
+            x, (ks, vs) = self._scan(
+                self_body, x, (params["blocks"], cache["k"], cache["v"])
+            )
+            new_cache = dict(cache, k=ks, v=vs)
+        else:
+            nspg = self.n_self_per_group
+            grouped = jax.tree.map(
+                lambda a: a.reshape((self.n_groups, nspg) + a.shape[1:]),
+                params["blocks"],
+            )
+            kc_g = cache["k"].reshape((self.n_groups, nspg) + cache["k"].shape[1:])
+            vc_g = cache["v"].reshape((self.n_groups, nspg) + cache["v"].shape[1:])
+
+            def group_body(carry, xs):
+                self_ps, cross_p, kcs, vcs = xs
+                h, kv = self._scan(self_body, carry, (self_ps, kcs, vcs))
+                ck, cv = L.project_kv(cfg, cross_p["attn"], media, None)
+                h = cross_block(cfg, cross_p, h, media)
+                return h, (kv, (ck, cv))
+
+            x, (kv, cross_kv) = self._scan(
+                group_body, x, (grouped, params["cross_blocks"], kc_g, vc_g)
+            )
+            ks, vs = kv
+            new_cache = dict(
+                cache,
+                k=ks.reshape((-1,) + ks.shape[2:]),
+                v=vs.reshape((-1,) + vs.shape[2:]),
+                cross_k=cross_kv[0],
+                cross_v=cross_kv[1],
+            )
+
+        x = L.apply_norm(cfg, params["ln_f"], x[:, -1:])
+        logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
+        return logits, new_cache
+
+    # -- decode ------------------------------------------------------------
+    def decode_step(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jnp.ndarray,
+        pos: jnp.ndarray,
+        kv_writer=direct_kv_write,
+        unload_mask: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Params]:
+        """One decode step. tokens [B], pos [B] -> logits [B, V], new cache.
+
+        KV-write routing (the uRDMA integration):
+        * plain cache -> ``kv_writer`` (default: direct scatter = offload
+          path);
+        * cache with a staging ring (``repro.kvcache.staged.add_ring``) ->
+          ``unload_mask`` [B] routes each sequence: True = append to the
+          ring (unload path; attention reads cache ∪ ring, the serve loop
+          drains in bulk), False = direct scatter. The decision module
+          supplies the mask from page-frequency counters.
+        """
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        b = tokens.shape[0]
+        x = L.embed_tokens(cfg, params["embed"], tokens[:, None], dtype)
+        clen = cache["k"].shape[2]
+        slots = cache_slots(cfg, pos, clen)
+        vmask = valid_mask(cfg, pos, clen)
+
+        has_ring = "ring_k" in cache
+        if has_ring and self.is_vlm:
+            raise NotImplementedError(
+                "staging-ring KV overlay is wired for the dense family; "
+                "VLM decode uses the direct path (DESIGN.md §Arch-applicability)"
+            )
+        if has_ring:
+            r = cache["ring_k"].shape[2]
+            cur = cache["ring_fill"]
+            if unload_mask is None:
+                unload_mask = jnp.ones((b,), jnp.bool_)
+            # overlay mask [B, S+R], shared by all layers:
+            ring_valid = (jnp.arange(r)[None, :] < cur) & (cache["ring_slot"] >= 0)
+            ring_valid = ring_valid | (
+                (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
+            )
+            slot_now = jnp.where(unload_mask, slots, clen)
+            shadow_src = jnp.where(
+                (jnp.arange(r)[None, :] < cur) & (cache["ring_slot"] >= 0),
+                cache["ring_slot"], clen,
+            )  # [B, R] pending slots (clen = none)
+            shadowed = jnp.zeros((b, clen + 1), jnp.bool_)
+            shadowed = shadowed.at[jnp.arange(b)[:, None], shadow_src].set(True)
+            shadowed = shadowed.at[jnp.arange(b), slot_now].set(True)[:, :clen]
+            full_mask = jnp.concatenate([vmask & ~shadowed, ring_valid], axis=1)
+            # direct subset writes main cache; staged subset drops (slot=clen)
+            direct_slots = jnp.where(unload_mask, clen, slots)
+        else:
+            full_mask = vmask
+            direct_slots = slots
+
+        def self_body(carry, xs):
+            h = carry
+            if has_ring:
+                p, kc, vc, rk, rv = xs
+            else:
+                p, kc, vc = xs
+            hn = L.apply_norm(cfg, p["ln1"], h)
+            k_new, v_new = L.project_kv(cfg, p["attn"], hn, pos[:, None])
+            if has_ring:
+                kc, vc = kv_writer(kc, vc, k_new, v_new, direct_slots)
+                rk = lax.dynamic_update_slice(rk, k_new, (0, cur, 0, 0))
+                rv = lax.dynamic_update_slice(rv, v_new, (0, cur, 0, 0))
+                ak = jnp.concatenate([kc, rk], axis=1)
+                av = jnp.concatenate([vc, rv], axis=1)
+                a = L.decode_attention(cfg, p["attn"], hn, pos, ak, av, full_mask)
+                h = h + a
+                h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+                return h, (kc, vc, rk, rv)
+            kc, vc = kv_writer(kc, vc, k_new, v_new, direct_slots)
+            a = L.decode_attention(cfg, p["attn"], hn, pos, kc, vc, full_mask)
+            h = h + a
+            h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+            return h, (kc, vc)
+
+        if has_ring and not self.is_vlm:
+            x, (ks, vs, rks, rvs) = self._scan(
+                self_body, x,
+                (params["blocks"], cache["k"], cache["v"],
+                 cache["ring_k"], cache["ring_v"]),
+            )
+            new_cache = dict(cache, k=ks, v=vs, ring_k=rks, ring_v=rvs)
+            new_cache["ring_slot"] = lax.dynamic_update_slice(
+                cache["ring_slot"],
+                jnp.where(unload_mask, slots, -1)[:, None], (0, cur),
+            )
+            new_cache["ring_fill"] = cur + 1
+        elif not self.is_vlm:
+            x, (ks, vs) = self._scan(self_body, x, (params["blocks"], cache["k"], cache["v"]))
+            new_cache = dict(cache, k=ks, v=vs)
+        else:
+            nspg = self.n_self_per_group
+            grouped = jax.tree.map(
+                lambda a: a.reshape((self.n_groups, nspg) + a.shape[1:]),
+                params["blocks"],
+            )
+            kc_g = cache["k"].reshape((self.n_groups, nspg) + cache["k"].shape[1:])
+            vc_g = cache["v"].reshape((self.n_groups, nspg) + cache["v"].shape[1:])
+
+            def group_body(carry, xs):
+                self_ps, cross_p, kcs, vcs, ck, cv = xs
+                h, kv = self._scan(self_body, carry, (self_ps, kcs, vcs))
+                # cross attention against precomputed image KV
+                hn = L.apply_norm(cfg, cross_p["ln1"], h)
+                a = L.decode_attention(
+                    cfg, cross_p["attn"], hn, pos, ck, cv,
+                    jnp.ones((b, ck.shape[1]), jnp.bool_), use_rope=False,
+                )
+                h = h + jnp.tanh(cross_p["gate_attn"]).astype(dtype) * a
+                m = L.apply_mlp(cfg, cross_p["mlp"], L.apply_norm(cfg, cross_p["ln2"], h))
+                h = h + jnp.tanh(cross_p["gate_mlp"]).astype(dtype) * m
+                return h, kv
+
+            x, (ks, vs) = self._scan(
+                group_body,
+                x,
+                (grouped, params["cross_blocks"], kc_g, vc_g,
+                 cache["cross_k"], cache["cross_v"]),
+            )
+            new_cache = dict(
+                cache,
+                k=ks.reshape((-1,) + ks.shape[2:]),
+                v=vs.reshape((-1,) + vs.shape[2:]),
+            )
+
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
+        return logits, new_cache

@@ -1,0 +1,91 @@
+"""AdamW (decoupled weight decay) + global-norm clipping + LR schedules.
+
+Self-contained (no optax in this container): optimizer states are plain
+pytrees mirroring the parameter tree, so they shard with the same
+NamedShardings as the parameters (FSDP-friendly) and checkpoint through the
+same manifest code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: Any            # first moment (pytree like params)
+    nu: Any            # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def _lr(self, step: jnp.ndarray) -> jnp.ndarray:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any
+    ) -> Tuple[Any, AdamWState, dict]:
+        """-> (new params, new state, metrics {grad_norm, lr})."""
+        gnorm = global_norm(grads)
+        if self.clip_norm > 0:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            # decoupled weight decay: skip 1-d params (norms, biases)
+            wd = self.weight_decay if p.ndim > 1 else 0.0
+            return (p - lr * (delta + wd * p)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu), {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Linear warmup -> cosine decay to floor*peak."""
+
+    def schedule(step: jnp.ndarray) -> jnp.ndarray:
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return schedule

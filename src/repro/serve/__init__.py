@@ -1,0 +1,3 @@
+from .engine import WRITE_MODES, ServeConfig, ServeEngine
+
+__all__ = ["WRITE_MODES", "ServeConfig", "ServeEngine"]

@@ -1,0 +1,135 @@
+"""Serving engine: batched prefill + decode with uRDMA KV-write routing.
+
+Write modes (per paper §3):
+  direct    every KV write scatters straight into the cache (offload path)
+  staged    every write appends to the staging ring; bulk drain when full
+            (unload path)
+  adaptive  the decision module routes per sequence: sequences whose
+            destination pages are HOT (frequency counters over page ids)
+            write direct; cold ones are staged. Counters update per step —
+            the paper's frequency policy on KV pages.
+
+The engine is model-agnostic (any family exposing prefill/decode_step);
+staged/adaptive need ring-overlay support (dense DecoderLM family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.monitor import ExactMonitor
+from ..kvcache import add_ring, drain_ring, maybe_drain, strip_ring
+
+WRITE_MODES = ("direct", "staged", "adaptive")
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int
+    write_mode: str = "direct"
+    ring_size: int = 8
+    page_size: int = 64          # page granularity for hotness accounting
+    hot_threshold: int = 4       # counts above -> page considered hot
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        assert cfg.write_mode in WRITE_MODES, cfg.write_mode
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        n_pages = max(1, cfg.max_seq // cfg.page_size)
+        self.page_monitor = ExactMonitor(n_regions=n_pages)
+        self.mon_state = self.page_monitor.init()
+        self.stats = {"direct_writes": 0, "staged_writes": 0, "drains": 0}
+
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: jnp.ndarray, media=None) -> Tuple[jnp.ndarray, Any]:
+        kw = {"media": media} if media is not None else {}
+        logits, cache = self.model.prefill(
+            self.params, tokens, self.cfg.max_seq, **kw
+        )
+        if self.cfg.write_mode in ("staged", "adaptive"):
+            cache = add_ring(cache, self.cfg.ring_size)
+        # prefill writes are dense/contiguous -> they stay on the offload
+        # path (the paper unloads only small scattered writes)
+        pages = jnp.arange(tokens.shape[1]) // self.cfg.page_size
+        self.mon_state = self.page_monitor.update(self.mon_state, pages)
+        return logits, cache
+
+    # ------------------------------------------------------------------
+    def _unload_mask(self, slots: jnp.ndarray) -> Optional[jnp.ndarray]:
+        mode = self.cfg.write_mode
+        if mode == "direct":
+            return None
+        if mode == "staged":
+            return jnp.ones_like(slots, jnp.bool_)
+        # adaptive: cold destination pages -> unload
+        pages = slots // self.cfg.page_size
+        counts = self.page_monitor.query(self.mon_state, pages)
+        return counts < self.cfg.hot_threshold
+
+    def decode(
+        self,
+        cache: Any,
+        first_tokens: jnp.ndarray,
+        start_pos: jnp.ndarray,
+        n_steps: int,
+        sample_key: Optional[jax.Array] = None,
+    ) -> Tuple[jnp.ndarray, Any]:
+        """Greedy (or sampled) decode loop. Returns (tokens [B, n], cache)."""
+        b = first_tokens.shape[0]
+        tokens = first_tokens
+        out = []
+        for t in range(n_steps):
+            pos = start_pos + t
+            slots = jnp.minimum(pos, self.cfg.max_seq - 1)
+            unload = self._unload_mask(slots)
+            kw = {}
+            if self.cfg.write_mode != "direct":
+                kw["unload_mask"] = unload
+            logits, cache = self.model.decode_step(
+                self.params, cache, tokens, pos, **kw
+            )
+            # monitor update: destination pages written this step
+            pages = slots // self.cfg.page_size
+            self.mon_state = self.page_monitor.update(self.mon_state, pages)
+            if unload is not None:
+                n_u = int(jnp.sum(unload))
+                self.stats["staged_writes"] += n_u
+                self.stats["direct_writes"] += b - n_u
+                before = int(cache["ring_fill"])
+                cache = maybe_drain(cache)
+                if int(cache["ring_fill"]) < before:
+                    self.stats["drains"] += 1
+            else:
+                self.stats["direct_writes"] += b
+
+            if self.cfg.greedy or sample_key is None:
+                tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                sample_key, sub = jax.random.split(sample_key)
+                tokens = jax.random.categorical(sub, logits).astype(jnp.int32)
+            out.append(tokens)
+
+        if self.cfg.write_mode != "direct":
+            cache = drain_ring(cache, use_kernel=False)
+        return jnp.stack(out, axis=1), cache
+
+    # ------------------------------------------------------------------
+    def generate(
+        self, prompt: jnp.ndarray, n_steps: int, media=None,
+        sample_key: Optional[jax.Array] = None,
+    ) -> jnp.ndarray:
+        """Convenience: prefill + decode. prompt [B, S] -> tokens [B, n]."""
+        logits, cache = self.prefill(prompt, media)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        start = jnp.full((prompt.shape[0],), prompt.shape[1], jnp.int32)
+        toks, cache = self.decode(cache, first, start, n_steps - 1, sample_key)
+        if self.cfg.write_mode != "direct":
+            cache = strip_ring(cache)
+        return jnp.concatenate([first[:, None], toks], axis=1)

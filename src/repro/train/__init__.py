@@ -1,0 +1,15 @@
+from .trainer import (
+    Trainer,
+    TrainerConfig,
+    TrainState,
+    init_train_state,
+    make_train_step,
+)
+
+__all__ = [
+    "Trainer",
+    "TrainerConfig",
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+]

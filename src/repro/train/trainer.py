@@ -1,0 +1,256 @@
+"""Training loop: microbatched train_step factory + fault-tolerant Trainer.
+
+train_step design
+-----------------
+* gradient accumulation: the global batch splits into M microbatches scanned
+  sequentially with an fp32 grad accumulator — this is what bounds MoE
+  staging-buffer and activation memory at the assigned global batch sizes;
+* remat: per-layer activation checkpointing inside the model (scan-of-layers
+  + jax.checkpoint), policy via the model's ``remat`` flag;
+* MoE monitor: the expert-load counters accumulated during the step update
+  ``TrainState.expert_counts``, and the NEXT step's adaptive hot-mask is
+  derived between steps (paper: thresholds recalibrated off the critical
+  path);
+* everything is a pure function (state, batch) -> (state, metrics): pjit
+  shards it with the rules in ``repro.distributed.sharding``.
+
+Trainer (host loop) fault tolerance
+-----------------------------------
+* checkpoint every N steps (async, atomic) + resume-from-latest;
+* straggler detection: EWMA of step wall time; steps slower than
+  ``straggler_factor``x the EWMA are logged and counted (on real fleets this
+  signal feeds the scheduler; here it feeds tests);
+* crash-retry: a failing step (transient host OOM / preemption in real
+  deployments, injected fault in tests) is retried from the last known-good
+  state up to ``max_retries`` times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.decision import expert_hot_mask
+from ..optim.adamw import AdamW, AdamWState
+
+log = logging.getLogger("repro.train")
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray                       # int32
+    expert_counts: Optional[jnp.ndarray]    # int32 [E] (MoE) | None
+    hot_mask: Optional[jnp.ndarray]         # bool [E] (MoE adaptive) | None
+
+
+def init_train_state(model, optimizer: AdamW, key, max_seq: int,
+                     n_hot_experts: int = 0) -> TrainState:
+    params = model.init(key, max_seq)
+    cfg = model.cfg
+    is_moe = getattr(cfg, "n_experts", 0) > 0
+    counts = jnp.zeros((cfg.n_experts,), jnp.int32) if is_moe else None
+    hot = (
+        jnp.zeros((cfg.n_experts,), jnp.bool_).at[:max(n_hot_experts, 1)].set(True)
+        if (is_moe and n_hot_experts) else None
+    )
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32),
+                      counts, hot)
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+    n_hot_experts: int = 0,
+    unroll_accum: bool = False,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    """Build the jit-able (state, batch) -> (state, metrics) step.
+
+    ``unroll_accum``: python-loop the grad-accum microbatches instead of
+    lax.scan — used by the roofline prober (cost_analysis counts a scanned
+    body once)."""
+    is_moe = getattr(model.cfg, "n_experts", 0) > 0
+
+    def loss_fn(params, mb, hot_mask):
+        if is_moe:
+            loss, loads = model.loss_with_stats(params, mb, remat=remat,
+                                                hot_mask=hot_mask)
+            return loss, jnp.sum(loads, axis=0)  # [E]
+        return model.loss(params, mb, remat=remat), jnp.zeros((0,), jnp.int32)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split_mb(batch):
+        def split(a):
+            b = a.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return a.reshape((microbatches, b // microbatches) + a.shape[1:])
+        return jax.tree.map(split, batch)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        hot = state.hot_mask
+
+        if microbatches == 1:
+            (loss, loads), grads = grad_fn(state.params, batch, hot)
+        else:
+            mbs = split_mb(batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            l0 = jnp.zeros((), jnp.float32)
+            e0 = jnp.zeros(
+                (model.cfg.n_experts if is_moe else 0,), jnp.int32
+            )
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, e_acc = carry
+                (l, e), g = grad_fn(state.params, mb, hot)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l, e_acc + e), None
+
+            if unroll_accum:
+                from ..models.scan import python_scan
+
+                (grads, loss, loads), _ = python_scan(acc_body, (g0, l0, e0), mbs)
+            else:
+                (grads, loss, loads), _ = jax.lax.scan(
+                    acc_body, (g0, l0, e0), mbs
+                )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+
+        new_params, new_opt, om = optimizer.update(grads, state.opt, state.params)
+
+        counts = state.expert_counts
+        new_hot = state.hot_mask
+        if is_moe and counts is not None:
+            counts = counts + loads
+            if n_hot_experts:
+                # paper §3.2: recalibrate the hot set off the critical path
+                new_hot = expert_hot_mask(counts, n_hot_experts)
+
+        metrics = {"loss": loss, **om, "step": state.step + 1}
+        return (
+            TrainState(new_params, new_opt, state.step + 1, counts, new_hot),
+            metrics,
+        )
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side Trainer with fault tolerance
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 5
+    max_retries: int = 2
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, train_step, state: TrainState, pipeline, cfg: TrainerConfig,
+                 put_batch=None):
+        self.train_step = train_step
+        self.state = state
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.put_batch = put_batch or (lambda b: jax.tree.map(jnp.asarray, b))
+        self.ewma_ms: Optional[float] = None
+        self.stragglers = 0
+        self.retries = 0
+        self._ckpt_thread = None
+        self.history: list = []
+
+    # -- fault tolerance ----------------------------------------------------
+    def maybe_resume(self):
+        from .. import checkpoint as ckpt
+
+        if not self.cfg.checkpoint_dir:
+            return
+        step = ckpt.latest_step(self.cfg.checkpoint_dir)
+        if step is None:
+            return
+        log.info("resuming from checkpoint step %d", step)
+        self.state = ckpt.restore(self.cfg.checkpoint_dir, self.state, step)
+        self.pipeline.skip_to(int(step))
+
+    def _checkpoint(self, step: int):
+        from .. import checkpoint as ckpt
+
+        if not self.cfg.checkpoint_dir:
+            return
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()  # never queue more than one write
+        self._ckpt_thread = ckpt.save_async(self.cfg.checkpoint_dir, step, self.state)
+        ckpt.prune(self.cfg.checkpoint_dir, self.cfg.keep_checkpoints)
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, fault_hook: Optional[Callable[[int], None]] = None) -> Dict:
+        """fault_hook(step): test hook that may raise to simulate failures."""
+        start = int(self.state.step)
+        for step in range(start, self.cfg.total_steps):
+            batch = self.put_batch(next(self.pipeline))
+            for attempt in range(self.cfg.max_retries + 1):
+                try:
+                    if fault_hook is not None:
+                        fault_hook(step)
+                    t0 = time.perf_counter()
+                    self.state, metrics = self.train_step(self.state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt_ms = (time.perf_counter() - t0) * 1e3
+                    break
+                except Exception as e:  # noqa: BLE001 — retry transient faults
+                    self.retries += 1
+                    log.warning("step %d attempt %d failed: %s", step, attempt, e)
+                    if attempt == self.cfg.max_retries:
+                        raise
+            # straggler detection (EWMA of step time); the first step is
+            # compile-dominated and would poison the baseline — skip it
+            if step == start:
+                pass
+            elif self.ewma_ms is None:
+                self.ewma_ms = dt_ms
+            else:
+                if (step - start) > self.cfg.straggler_warmup and dt_ms > (
+                    self.cfg.straggler_factor * self.ewma_ms
+                ):
+                    self.stragglers += 1
+                    log.warning(
+                        "straggler step %d: %.1fms vs EWMA %.1fms",
+                        step, dt_ms, self.ewma_ms,
+                    )
+                self.ewma_ms = 0.9 * self.ewma_ms + 0.1 * dt_ms
+
+            self.history.append(float(metrics["loss"]))
+            if step % self.cfg.log_every == 0:
+                log.info("step %d loss %.4f (%.0f ms)", step,
+                         float(metrics["loss"]), dt_ms)
+            if self.cfg.checkpoint_dir and (step + 1) % self.cfg.checkpoint_every == 0:
+                self._checkpoint(step + 1)
+
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        return {
+            "final_loss": self.history[-1] if self.history else float("nan"),
+            "stragglers": self.stragglers,
+            "retries": self.retries,
+            "steps": len(self.history),
+        }

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see ONE CPU device
+(the 512-device override belongs exclusively to launch/dryrun.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _cpu_only():
+    assert jax.default_backend() == "cpu"
+    yield
+
+
+@pytest.fixture()
+def rng():
+    return np.random.RandomState(0)
+
+
+def seeds(n=5):
+    """Deterministic seed sweep for the in-repo property harness
+    (hypothesis is not installable in this offline container)."""
+    return list(range(n))

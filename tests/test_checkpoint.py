@@ -1,0 +1,86 @@
+"""Checkpoint tests: atomicity, async, resume, elastic restore, pruning."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "b": jnp.zeros((16,), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 7, tree)
+    out = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_prune(tmp_path):
+    for s in (10, 20, 30, 40):
+        ckpt.save(str(tmp_path), s, _tree())
+    assert ckpt.latest_step(str(tmp_path)) == 40
+    ckpt.prune(str(tmp_path), keep=2)
+    assert ckpt.list_steps(str(tmp_path)) == [30, 40]
+
+
+def test_async_save(tmp_path):
+    t = ckpt.save_async(str(tmp_path), 5, _tree())
+    t.join()
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    # simulate a crash mid-save: a .tmp dir + stale LATEST pointing at junk
+    os.makedirs(tmp_path / "step_000000009.tmp")
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("step_000000009")
+    assert ckpt.latest_step(str(tmp_path)) is None  # junk rejected
+    assert ckpt.list_steps(str(tmp_path)) == [1]    # real one still there
+
+
+def test_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = {"params": {"w": jnp.zeros((8, 16))}, "step": jnp.asarray(0)}
+    with pytest.raises(ValueError, match="structure mismatch"):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((4, 16))
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore onto a (1x1) mesh with explicit NamedShardings — the code
+    path that re-lays-out a checkpoint onto a different topology."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = _tree()
+    ckpt.save(str(tmp_path), 3, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = {
+        "params": {"w": NamedSharding(mesh, P("data", "model")),
+                   "b": NamedSharding(mesh, P(None))},
+        "step": NamedSharding(mesh, P()),
+    }
+    out = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: tree), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert out["params"]["w"].sharding == sh["params"]["w"]

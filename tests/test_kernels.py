@@ -1,0 +1,133 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs ref.py
+oracles, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cms import cms_query, cms_update
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.staged_scatter import staged_scatter
+
+
+# ---------------------------------------------------------------------------
+# staged_scatter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,w,n,bw", [
+    (16, 256, 8, 128),
+    (64, 512, 32, 256),
+    (8, 128, 8, 128),
+    (128, 1024, 64, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_staged_scatter_matches_ref(r, w, n, bw, dtype):
+    rng = np.random.RandomState(r + n)
+    dest = jnp.asarray(rng.randn(r, w), dtype)
+    staging = jnp.asarray(rng.randn(n, w), dtype)
+    rows = jnp.asarray(rng.permutation(r)[:n], jnp.int32)  # unique (precondition)
+    valid = jnp.asarray(rng.rand(n) > 0.3)
+    out = staged_scatter(dest, staging, rows, valid, block_w=bw, interpret=True)
+    expected = ref.staged_scatter_ref(dest, staging, rows, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32))
+
+
+def test_staged_scatter_all_invalid_is_noop():
+    dest = jnp.ones((4, 128))
+    staging = jnp.zeros((2, 128))
+    out = staged_scatter(dest, staging, jnp.asarray([0, 1], jnp.int32),
+                         jnp.zeros(2, bool), block_w=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dest))
+
+
+# ---------------------------------------------------------------------------
+# cms
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth,log2w,n", [(4, 12, 512), (2, 10, 300), (3, 8, 64),
+                                           (4, 12, 1000)])
+def test_cms_update_query_match_ref(depth, log2w, n):
+    rng = np.random.RandomState(depth * n)
+    counts = jnp.asarray(rng.randint(0, 5, (depth, 1 << log2w)), jnp.int32)
+    ids = jnp.asarray(rng.randint(0, 10**6, n), jnp.int32)
+    up = cms_update(counts, ids, interpret=True)
+    up_ref = ref.cms_update_ref(counts, ids)
+    np.testing.assert_array_equal(np.asarray(up), np.asarray(up_ref))
+    q = cms_query(up, ids, interpret=True)
+    q_ref = ref.cms_query_ref(up_ref, ids)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,t,d,causal,window", [
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 8, 8, 256, 256, 32, True, 0),
+    (2, 4, 1, 128, 256, 64, True, 0),    # GQA + chunked-prefill geometry
+    (1, 4, 4, 128, 128, 64, False, 0),   # bidirectional (whisper encoder)
+    (1, 4, 2, 256, 256, 64, True, 96),   # sliding window
+    (1, 2, 2, 64, 64, 128, True, 0),
+])
+def test_flash_attention_matches_ref(b, hq, hkv, s, t, d, causal, window):
+    rng = np.random.RandomState(s + t)
+    q = jnp.asarray(rng.randn(b, hq, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hkv, t, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hkv, t, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d,bk", [
+    (2, 4, 2, 512, 64, 128),
+    (1, 8, 1, 1024, 128, 256),
+    (3, 4, 4, 256, 32, 128),
+])
+def test_flash_decode_matches_ref(b, hq, hkv, t, d, bk):
+    rng = np.random.RandomState(t)
+    q = jnp.asarray(rng.randn(b, hq, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, t, hkv, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, t, hkv, d), jnp.float32)
+    mask = jnp.asarray(rng.rand(b, t) > 0.4)
+    out = flash_decode(q, k, v, mask, block_k=bk, interpret=True)
+    expected = ref.flash_decode_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_single_valid_slot():
+    """Degenerate mask: only one valid cache entry -> output == its value."""
+    b, h, t, d = 1, 2, 128, 32
+    q = jnp.ones((b, h, d))
+    k = jnp.zeros((b, t, h, d)).at[0, 7].set(1.0)
+    v = jnp.zeros((b, t, h, d)).at[0, 7].set(3.0)
+    mask = jnp.zeros((b, t), bool).at[0, 7].set(True)
+    out = flash_decode(q, k, v, mask, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 3.0, atol=1e-6)

@@ -1,0 +1,131 @@
+"""KV-cache write-path tests: staged ring overlay == direct writes, paged
+pool bookkeeping, drain via the Pallas kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kvcache import (
+    add_ring,
+    allocate_pages,
+    direct_insert,
+    drain_ring,
+    gather_kv,
+    make_paged_cache,
+    maybe_drain,
+    strip_ring,
+    write_destination,
+)
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "h2o-danube-3-4b"])
+def test_staged_ring_decode_equals_direct(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), 64)
+    B, S, STEPS = 2, 24, 8
+    tokens = jax.random.randint(jax.random.key(1), (B, S + STEPS), 0, cfg.vocab)
+
+    _, cache_d = m.prefill(params, tokens[:, :S], 64)
+    cd = cache_d
+    for t in range(STEPS):
+        lg_d, cd = m.decode_step(params, cd, tokens[:, S + t],
+                                 jnp.full((B,), S + t, jnp.int32))
+
+    _, cache_s = m.prefill(params, tokens[:, :S], 64)
+    cs = add_ring(cache_s, 4)
+    for t in range(STEPS):
+        lg_s, cs = m.decode_step(params, cs, tokens[:, S + t],
+                                 jnp.full((B,), S + t, jnp.int32))
+        cs = maybe_drain(cs)
+
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_d),
+                               atol=1e-4, rtol=1e-4)
+    cs = drain_ring(cs, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(cs["k"]), np.asarray(cd["k"]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_adaptive_mixed_paths_match_direct():
+    cfg = get_config("stablelm-1.6b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), 64)
+    B, S, STEPS = 4, 16, 6
+    tokens = jax.random.randint(jax.random.key(1), (B, S + STEPS), 0, cfg.vocab)
+    full = m.forward(params, tokens)
+    _, cache = m.prefill(params, tokens[:, :S], 64)
+    cs = add_ring(cache, 4)
+    mask = jnp.asarray([False, True, False, True])  # per-sequence routing
+    for t in range(STEPS):
+        lg, cs = m.decode_step(params, cs, tokens[:, S + t],
+                               jnp.full((B,), S + t, jnp.int32),
+                               unload_mask=mask)
+        cs = maybe_drain(cs)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S + STEPS - 1]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_drain_with_kernel_matches_reference_drain():
+    cfg = get_config("stablelm-1.6b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), 64)
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 4), 0, cfg.vocab)
+    _, cache = m.prefill(params, tokens[:, :S], 64)
+    cs = add_ring(cache, 4)
+    for t in range(4):
+        _, cs = m.decode_step(params, cs, tokens[:, S + t],
+                              jnp.full((B,), S + t, jnp.int32))
+    a = drain_ring(cs, use_kernel=True)
+    b = drain_ring(cs, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a["k"], np.float32),
+                               np.asarray(b["k"], np.float32), atol=1e-6)
+
+
+def test_strip_ring_removes_overlay():
+    cfg = get_config("stablelm-1.6b").reduced()
+    m = build_model(cfg)
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: m.init_cache(2, 32, jnp.float32)),
+    )
+    ringed = add_ring(cache, 4)
+    assert "ring_k" in ringed
+    assert set(strip_ring(ringed)) == set(cache)
+
+
+# ---------------------------------------------------------------------------
+# paged pool
+# ---------------------------------------------------------------------------
+
+
+def test_paged_cache_alloc_insert_gather():
+    cache = make_paged_cache(n_pages=16, page_size=4, h=2, dh=8, batch=3,
+                             max_pages_per_seq=4)
+    rng = np.random.RandomState(0)
+    seqs = jnp.asarray([0, 1, 2], jnp.int32)
+    ref = np.zeros((3, 16, 2, 8), np.float32)
+    for t in range(10):
+        cache = allocate_pages(cache, seqs)
+        k = jnp.asarray(rng.randn(3, 2, 8), jnp.float32)
+        v = jnp.asarray(rng.randn(3, 2, 8), jnp.float32)
+        cache = direct_insert(cache, seqs, k, v)
+        ref[:, t] = np.asarray(k)
+    assert cache.lengths.tolist() == [10, 10, 10]
+    assert int(cache.n_allocated) == 9  # ceil(10/4)=3 pages x 3 seqs
+    for b in range(3):
+        kk, vv, valid = gather_kv(cache, jnp.asarray(b), 16)
+        assert valid.tolist() == [True] * 10 + [False] * 6
+        np.testing.assert_allclose(np.asarray(kk[:10]), ref[b, :10], atol=1e-6)
+
+
+def test_write_destination_page_mapping():
+    cache = make_paged_cache(n_pages=8, page_size=4, h=1, dh=4, batch=2,
+                             max_pages_per_seq=4)
+    seqs = jnp.asarray([0, 1], jnp.int32)
+    cache = allocate_pages(cache, seqs)
+    page, row = write_destination(cache, seqs)
+    assert row.tolist() == [0, 0]
+    assert page[0] != page[1]  # each sequence got its own page

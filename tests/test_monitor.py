@@ -1,0 +1,68 @@
+"""Monitor unit + property tests (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.monitor import CMSMonitor, ExactMonitor, calibrate_threshold
+
+
+def test_exact_counts_match_histogram():
+    mon = ExactMonitor(n_regions=64)
+    st = mon.init()
+    rng = np.random.RandomState(0)
+    ids = rng.randint(0, 64, size=500).astype(np.int32)
+    st = mon.update(st, jnp.asarray(ids))
+    expected = np.bincount(ids, minlength=64)
+    np.testing.assert_array_equal(np.asarray(st.counts), expected)
+    assert int(st.total) == 500
+
+
+def test_exact_query():
+    mon = ExactMonitor(n_regions=8)
+    st = mon.init()
+    st = mon.update(st, jnp.asarray([3, 3, 3, 1], jnp.int32))
+    q = mon.query(st, jnp.asarray([3, 1, 0], jnp.int32))
+    assert q.tolist() == [3, 1, 0]
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_cms_never_underestimates(seed):
+    """Property: CMS estimates >= exact counts (one-sided error)."""
+    mon = CMSMonitor(depth=4, log2_width=10)
+    st = mon.init()
+    rng = np.random.RandomState(seed)
+    ids = rng.randint(0, 10**6, size=400).astype(np.int32)
+    st = mon.update(st, jnp.asarray(ids))
+    uniq, counts = np.unique(ids, return_counts=True)
+    est = np.asarray(mon.query(st, jnp.asarray(uniq)))
+    assert np.all(est >= counts)
+
+
+def test_cms_reasonably_tight():
+    mon = CMSMonitor(depth=4, log2_width=12)
+    st = mon.init()
+    rng = np.random.RandomState(1)
+    ids = rng.randint(0, 1000, size=2000).astype(np.int32)
+    st = mon.update(st, jnp.asarray(ids))
+    uniq, counts = np.unique(ids, return_counts=True)
+    est = np.asarray(mon.query(st, jnp.asarray(uniq)))
+    # with width >> distinct ids, overestimation should be tiny
+    assert np.mean(est - counts) < 1.0
+
+
+def test_calibrate_threshold_top_k():
+    counts = jnp.asarray([10, 1, 8, 3, 7, 2, 9, 0], jnp.int32)
+    thr = calibrate_threshold(counts, offload_top_k=3)
+    # top-3 are 10, 9, 8 -> threshold 8 keeps exactly those at/above it
+    assert int(thr) == 8
+    assert int(jnp.sum(counts >= thr)) == 3
+
+
+def test_decay_halves_counters():
+    mon = ExactMonitor(n_regions=4, decay_every=8)
+    st = mon.init()
+    for _ in range(2):
+        st = mon.update(st, jnp.asarray([0, 0, 1, 2], jnp.int32))
+    # second update crosses the decay boundary -> counters halved
+    assert int(st.counts[0]) < 4

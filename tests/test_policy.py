@@ -1,0 +1,101 @@
+"""Policy + decision-module tests (paper §3.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decision import DecisionModule, expert_hot_mask
+from repro.core.monitor import ExactMonitor
+from repro.core.policy import (
+    AlwaysOffload,
+    AlwaysUnload,
+    FrequencyPolicy,
+    HintPolicy,
+    HysteresisPolicy,
+    top_k_hot_table,
+)
+from repro.core.types import make_write_batch
+
+
+def _batch(regions, sizes=None, hints=None):
+    r = jnp.asarray(regions, jnp.int32)
+    kw = {}
+    if sizes is not None:
+        kw["size"] = jnp.asarray(sizes, jnp.int32)
+    if hints is not None:
+        kw["hint"] = jnp.asarray(hints, jnp.int32)
+    return make_write_batch(r, **kw)
+
+
+def test_always_policies():
+    b = _batch([1, 2, 3])
+    assert not AlwaysOffload().decide(None, b).any()
+    assert AlwaysUnload().decide(None, b).all()
+
+
+def test_hint_policy_per_request_marks():
+    b = _batch([5, 6, 7], hints=[1, 0, 1])
+    un = HintPolicy().decide(None, b)
+    # hinted (hot) -> offload (False); unhinted -> unload (True)
+    assert un.tolist() == [False, True, False]
+
+
+def test_hint_policy_hot_table_and_size_gate():
+    hot = jnp.zeros((10,), bool).at[jnp.asarray([1, 2])].set(True)
+    b = _batch([1, 3, 2, 4], sizes=[16, 16, 16, 10_000])
+    un = HintPolicy(hot_regions=hot, max_unload_size=4096).decide(None, b)
+    # region 1,2 hot -> offload; region 3 cold+small -> unload;
+    # region 4 cold but LARGE -> stays offloaded (paper: small writes only)
+    assert un.tolist() == [False, True, False, False]
+
+
+def test_frequency_policy_threshold():
+    mon = ExactMonitor(n_regions=16)
+    st = mon.init()
+    st = mon.update(st, jnp.asarray([7] * 10 + [3], jnp.int32))
+    pol = FrequencyPolicy(monitor=mon, threshold=5)
+    un = pol.decide(st, _batch([7, 3]))
+    assert un.tolist() == [False, True]  # hot region 7 offloads, cold 3 unloads
+
+
+def test_frequency_policy_relative_threshold():
+    mon = ExactMonitor(n_regions=4)
+    st = mon.init()
+    st = mon.update(st, jnp.asarray([0] * 97 + [1, 2, 3], jnp.int32))
+    pol = FrequencyPolicy(monitor=mon, rel=1.0, n_regions=4)
+    un = pol.decide(st, _batch([0, 1]))
+    # uniform expectation = 25; region0 (97) >= 25 offloads, region1 (1) unloads
+    assert un.tolist() == [False, True]
+
+
+def test_decision_module_updates_monitor_then_decides():
+    mon = ExactMonitor(n_regions=8)
+    dm = DecisionModule(policy=FrequencyPolicy(monitor=mon, threshold=2), monitor=mon)
+    st = dm.init_state()
+    # first sighting of region 5: count becomes 1 < 2 -> unload
+    un, st, stats = dm(st, _batch([5]))
+    assert un.tolist() == [True]
+    # two more: count reaches 3 >= 2 -> offload
+    un, st, stats = dm(st, _batch([5, 5]))
+    assert un.tolist()[-1] == False  # noqa: E712
+    assert int(stats.n_offloaded) + int(stats.n_unloaded) == 2
+
+
+def test_hysteresis_policy_prefers_offload_between_bands():
+    mon = ExactMonitor(n_regions=8)
+    st = mon.init()
+    st = mon.update(st, jnp.asarray([1] * 5, jnp.int32))  # mid-band count=5
+    pol = HysteresisPolicy(monitor=mon, lo=2, hi=8)
+    un = pol.decide(st, _batch([1]))
+    assert not bool(un[0])  # between lo/hi -> safe default = offload
+
+
+def test_top_k_hot_table():
+    counts = jnp.asarray([5, 1, 9, 3], jnp.int32)
+    hot = top_k_hot_table(counts, 2)
+    assert hot.tolist() == [True, False, True, False]
+
+
+def test_expert_hot_mask():
+    load = jnp.asarray([100, 2, 50, 1, 75, 3, 2, 1], jnp.int32)
+    hot = expert_hot_mask(load, 3)
+    assert hot.tolist() == [True, False, True, False, True, False, False, False]

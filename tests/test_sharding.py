@@ -1,0 +1,95 @@
+"""Sharding-rule tests on an ABSTRACT 16x16 / 2x16x16 mesh (no devices
+needed): every param/cache spec must divide its dimensions, and the per-arch
+attention schemes must match the divisibility table in DESIGN.md."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, get_shape
+from repro.distributed.sharding import (
+    attention_scheme,
+    cache_pspec,
+    param_pspec,
+    tree_paths_and_leaves,
+)
+from repro.models import abstract_params, build_model
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, spec_entry):
+    if spec_entry is None:
+        return 1
+    axes = (spec_entry,) if isinstance(spec_entry, str) else spec_entry
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _check_divisible(mesh, spec, shape, ctx):
+    for dim, entry in zip(shape, spec):
+        assert dim % _axis_size(mesh, entry) == 0, (ctx, shape, spec)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["single", "multipod"])
+def test_param_specs_divide_shapes(arch, mesh):
+    cfg = get_config(arch)
+    shape = get_shape("train_4k")
+    aparams = abstract_params(cfg, shape)
+    for path, leaf in tree_paths_and_leaves(aparams):
+        spec = param_pspec(cfg, mesh, path, leaf.shape)
+        assert len(spec) <= len(leaf.shape)
+        _check_divisible(mesh, spec, leaf.shape, f"{arch}:{path}")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cache_specs_divide_shapes(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for shape_name, batch in (("decode_32k", 128), ("long_500k", 1)):
+        shape = get_shape(shape_name)
+        if shape_name == "long_500k" and not cfg.subquadratic:
+            continue
+        cache = jax.eval_shape(
+            lambda: model.init_cache(batch, shape.seq_len, jnp.bfloat16)
+        )
+        for path, leaf in tree_paths_and_leaves(cache):
+            spec = cache_pspec(cfg, MESH, path, leaf.shape)
+            _check_divisible(MESH, spec, leaf.shape, f"{arch}:{path}")
+
+
+def test_attention_schemes_match_design_table():
+    """DESIGN.md's divisibility-driven scheme table, enforced."""
+    expected = {
+        "nemotron-4-15b": "qheads_kvrepl",   # 48%16=0, kv 8%16!=0
+        "h2o-danube-3-4b": "qheads_kvrepl",  # 32%16=0, kv 8
+        "qwen2-7b": "headdim",               # 28 heads, Dh=128
+        "stablelm-1.6b": "heads",            # 32/32
+        "granite-moe-3b-a800m": "headdim",   # 24 heads, Dh=64
+        "qwen3-moe-235b-a22b": "qheads_kvrepl",  # 64, kv 4
+        "mamba2-130m": "none",               # attention-free
+        "llama-3.2-vision-90b": "qheads_kvrepl",  # 64, kv 8
+        "whisper-medium": "heads",           # 16/16
+        "zamba2-2.7b": "heads",              # 32/32
+    }
+    for arch, want in expected.items():
+        got = attention_scheme(get_config(arch), MESH)
+        assert got == want, (arch, got, want)
+
+
+def test_lookup_table_never_vocab_sharded():
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        spec = param_pspec(cfg, MESH, "embed/tok", (cfg.vocab, cfg.d_model))
+        assert spec[0] is None, (arch, spec)  # gather stays local
+
+
+def test_long_500k_cache_seq_sharded():
+    cfg = get_config("zamba2-2.7b")
+    spec = cache_pspec(cfg, MESH, "k", (9, 1, 524288, 32, 80))
+    # B=1: sequence must shard over every axis
+    assert spec[2] == ("data", "model")

@@ -1,0 +1,94 @@
+"""Fig. 3 reproduction: validate the calibrated simulator against the
+paper's own claims (§4, FIG3_CLAIMS) using the REAL policy code."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import FIG3_CLAIMS
+from repro.core.monitor import ExactMonitor
+from repro.core.policy import AlwaysOffload, AlwaysUnload, FrequencyPolicy, HintPolicy
+from repro.core.simulator import RDMASimulator, sweep_point, zipf_regions
+
+N, W = 60_000, 6_000  # reduced from the paper's 5M; steady-state average
+
+
+def _avg(policy, n_regions, monitor=None, seed=0):
+    avg, _ = sweep_point(jax.random.key(seed), n_regions, N, W, policy, monitor)
+    return avg
+
+
+def test_offload_all_hit_latency():
+    """Paper: ~2.6 us RTT with 1 region (no MTT capacity misses)."""
+    avg = _avg(AlwaysOffload(), 1)
+    assert abs(avg - FIG3_CLAIMS["offload_rtt_1_region"]) < 0.1
+
+
+def test_offload_degrades_2x_at_2e20_regions():
+    """Paper: ~5.1 us at 2^20 regions (~2x degradation)."""
+    avg = _avg(AlwaysOffload(), 2**20)
+    assert abs(avg - FIG3_CLAIMS["offload_rtt_2e20_regions"]) < 0.3
+
+
+def test_unload_flat_across_region_counts():
+    """Paper: unload path ~3.4 us, 'stays almost unaffected'."""
+    lats = [_avg(AlwaysUnload(), r) for r in (1, 2**10, 2**20)]
+    assert all(abs(l - FIG3_CLAIMS["unload_rtt_flat"]) < 0.2 for l in lats)
+    assert max(lats) - min(lats) < 0.25  # flatness
+
+
+def test_improvement_at_2e20_is_about_31pct():
+    off = _avg(AlwaysOffload(), 2**20)
+    un = _avg(AlwaysUnload(), 2**20)
+    improvement = 1.0 - un / off
+    assert abs(improvement - FIG3_CLAIMS["improvement_at_2e20"]) < 0.05
+
+
+def test_adaptive_matches_best_of_both():
+    """Paper: adaptive (hint top-4096) matches the best line everywhere,
+    and can beat both mid-range."""
+    for r in (1, 2**12, 2**17, 2**20):
+        hot = jnp.zeros((r,), bool).at[: min(4096, r)].set(True)
+        ad = _avg(HintPolicy(hot_regions=hot), r)
+        off = _avg(AlwaysOffload(), r)
+        un = _avg(AlwaysUnload(), r)
+        assert ad <= min(off, un) + 0.15, (r, ad, off, un)
+
+
+def test_adaptive_beats_both_midrange():
+    r = 2**14
+    hot = jnp.zeros((r,), bool).at[:4096].set(True)
+    ad = _avg(HintPolicy(hot_regions=hot), r)
+    off = _avg(AlwaysOffload(), r)
+    un = _avg(AlwaysUnload(), r)
+    assert ad < min(off, un) - 0.1  # strictly better in the crossover zone
+
+
+def test_frequency_policy_tracks_hint_policy():
+    """The frequency-based policy (monitor-driven) should approach the
+    hint-based (oracle) policy's latency."""
+    r = 2**16
+    mon = ExactMonitor(n_regions=r)
+    freq = _avg(FrequencyPolicy(monitor=mon, threshold=3), r, monitor=mon)
+    hot = jnp.zeros((r,), bool).at[:4096].set(True)
+    hint = _avg(HintPolicy(hot_regions=hot), r)
+    assert freq < hint + 0.4
+
+
+def test_zipf_skew():
+    ids = zipf_regions(jax.random.key(0), 50_000, 1024, skew=0.5)
+    import numpy as np
+
+    counts = np.bincount(np.asarray(ids), minlength=1024)
+    # Zipf(0.5): head regions much hotter than tail
+    assert counts[:16].mean() > 4 * counts[-256:].mean()
+
+
+def test_unload_writes_bypass_mtt():
+    """Unloaded writes must not touch the MTT cache (they hit the staging
+    buffer whose translation is resident)."""
+    sim = RDMASimulator()
+    regions = jnp.asarray([5, 5, 5, 5], jnp.int32)
+    res = sim.run(regions, jnp.asarray([True, True, True, True]))
+    assert int(res.mtt_hits) == 0
+    res2 = sim.run(regions, jnp.asarray([False, False, False, False]))
+    assert int(res2.mtt_hits) == 3  # first is a compulsory miss

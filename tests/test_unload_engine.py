@@ -1,0 +1,182 @@
+"""uMTT + staging ring + RemoteWriteEngine tests (paper §3.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import umtt as U
+from repro.core import unload as UL
+from repro.core.decision import DecisionModule
+from repro.core.monitor import ExactMonitor
+from repro.core.policy import AlwaysOffload, AlwaysUnload, FrequencyPolicy
+from repro.core.staged_write import RemoteWriteEngine
+from repro.core.types import make_write_batch
+
+
+# ---------------------------------------------------------------------------
+# uMTT
+# ---------------------------------------------------------------------------
+
+
+def test_umtt_register_validate_deregister():
+    t = U.make_umtt(8)
+    t = U.register(t, base=0, n_regions=10, stag=42)
+    ok = U.validate(t, jnp.asarray([0, 9, 10], jnp.int32),
+                    jnp.asarray([42, 42, 42], jnp.int32))
+    assert ok.tolist() == [True, True, False]  # range check
+    ok = U.validate(t, jnp.asarray([5], jnp.int32), jnp.asarray([7], jnp.int32))
+    assert ok.tolist() == [False]  # wrong stag
+    t = U.deregister(t, stag=42)
+    ok = U.validate(t, jnp.asarray([5], jnp.int32), jnp.asarray([42], jnp.int32))
+    assert ok.tolist() == [False]  # removed at dereg (paper §3.1)
+
+
+def test_umtt_permissions():
+    t = U.make_umtt(4)
+    t = U.register(t, 0, 4, stag=1, perm=U.PERM_READ)  # read-only region
+    ok = U.validate(t, jnp.asarray([1], jnp.int32), jnp.asarray([1], jnp.int32),
+                    need_perm=U.PERM_WRITE)
+    assert ok.tolist() == [False]
+
+
+def test_umtt_multiple_registrations():
+    t = U.make_umtt(8)
+    t = U.register(t, 0, 4, stag=1)
+    t = U.register(t, 100, 4, stag=2)
+    ok = U.validate(t, jnp.asarray([2, 102, 102], jnp.int32),
+                    jnp.asarray([1, 2, 1], jnp.int32))
+    assert ok.tolist() == [True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# staging ring
+# ---------------------------------------------------------------------------
+
+
+def _full_table(n_regions):
+    t = U.make_umtt(8)
+    return U.register(t, 0, n_regions, stag=7)
+
+
+def test_ring_append_sequential_slots():
+    ring = UL.make_ring(8, 4)
+    pay = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    mask = jnp.asarray([True, False, True])
+    ring, slot = UL.append(
+        ring, pay, jnp.asarray([1, 2, 3], jnp.int32),
+        jnp.zeros(3, jnp.int32), jnp.full((3,), 4, jnp.int32),
+        jnp.full((3,), 7, jnp.int32), mask,
+    )
+    # staged entries take consecutive slots; skipped one gets none
+    assert slot.tolist() == [0, -1, 1] or slot.tolist() == [0, 8, 1]
+    assert int(ring.head) == 2
+    assert ring.live.tolist()[:2] == [True, True]
+
+
+def test_drain_respects_umtt_and_copies():
+    table = _full_table(4)
+    ring = UL.make_ring(4, 4)
+    pay = jnp.ones((2, 4), jnp.float32)
+    ring, _ = UL.append(
+        ring, pay, jnp.asarray([2, 3], jnp.int32), jnp.zeros(2, jnp.int32),
+        jnp.full((2,), 4, jnp.int32),
+        jnp.asarray([7, 99], jnp.int32),  # second has a BAD stag
+        jnp.ones(2, bool),
+    )
+    mem = jnp.zeros((4, 4))
+    ring, mem, rejected = UL.drain(ring, mem, table)
+    assert int(rejected) == 1
+    assert bool(jnp.all(mem[2] == 1.0))
+    assert bool(jnp.all(mem[3] == 0.0))  # rejected write never lands
+    assert not bool(ring.live.any())
+
+
+def test_need_drain_watermark():
+    ring = UL.make_ring(4, 2)
+    pay = jnp.zeros((3, 2))
+    ring, _ = UL.append(ring, pay, jnp.zeros(3, jnp.int32), jnp.zeros(3, jnp.int32),
+                        jnp.full((3,), 2, jnp.int32), jnp.zeros(3, jnp.int32),
+                        jnp.ones(3, bool))
+    assert bool(UL.need_drain(ring, 2))
+    assert not bool(UL.need_drain(ring, 1))
+
+
+# ---------------------------------------------------------------------------
+# RemoteWriteEngine: parity / ordering / security / telemetry
+# ---------------------------------------------------------------------------
+
+
+def _engine(policy, monitor=None, ring=32, width=8):
+    return RemoteWriteEngine(
+        decision=DecisionModule(policy=policy, monitor=monitor),
+        ring_capacity=ring, width=width,
+    )
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("mode", ["offload", "unload", "adaptive"])
+def test_engine_parity_against_python_oracle(seed, mode):
+    """PROPERTY: after flush, engine memory == last-write-wins oracle,
+    for any path mix (the ordering-parity guarantee, beyond the paper)."""
+    R, W = 32, 8
+    table = _full_table(R)
+    mon = ExactMonitor(n_regions=R)
+    policy = {
+        "offload": AlwaysOffload(),
+        "unload": AlwaysUnload(),
+        "adaptive": FrequencyPolicy(monitor=mon, threshold=3),
+    }[mode]
+    eng = _engine(policy, mon if mode == "adaptive" else None, ring=16, width=W)
+    state = eng.init_state(table)
+    mem = jnp.zeros((R, W))
+    rng = np.random.RandomState(seed)
+    ref = np.zeros((R, W))
+    for _ in range(12):
+        regions = rng.choice([0, 0, 1, *range(4, 16)], size=8).astype(np.int32)
+        payload = rng.randn(8, W).astype(np.float32)
+        batch = make_write_batch(jnp.asarray(regions),
+                                 size=jnp.full((8,), W, jnp.int32))
+        state, mem = eng.write(state, mem, batch, jnp.asarray(payload),
+                               jnp.full((8,), 7, jnp.int32))
+        for i in range(8):
+            ref[regions[i]] = payload[i]
+    state, mem = eng.flush(state, mem)
+    np.testing.assert_allclose(np.asarray(mem), ref)
+
+
+def test_engine_rejects_bad_stag_on_unload_path():
+    table = _full_table(8)
+    eng = _engine(AlwaysUnload(), ring=8, width=4)
+    st = eng.init_state(table)
+    batch = make_write_batch(jnp.asarray([3], jnp.int32),
+                             size=jnp.asarray([4], jnp.int32))
+    st, mem = eng.write(st, jnp.zeros((8, 4)), batch, jnp.ones((1, 4)),
+                        jnp.asarray([99], jnp.int32))
+    st, mem = eng.flush(st, mem)
+    assert int(st.n_rejected) == 1
+    assert bool(jnp.all(mem == 0))
+
+
+def test_engine_telemetry_counts():
+    table = _full_table(8)
+    mon = ExactMonitor(n_regions=8)
+    eng = _engine(FrequencyPolicy(monitor=mon, threshold=100), mon, width=4)
+    st = eng.init_state(table)
+    batch = make_write_batch(jnp.asarray([0, 1, 2], jnp.int32),
+                             size=jnp.full((3,), 4, jnp.int32))
+    st, _ = eng.write(st, jnp.zeros((8, 4)), batch, jnp.zeros((3, 4)),
+                      jnp.full((3,), 7, jnp.int32))
+    assert int(st.n_unloaded) == 3  # everything cold under huge threshold
+    assert int(st.n_offloaded) == 0
+
+
+def test_partial_write_sizes():
+    """Writes smaller than the region width only touch their bytes."""
+    table = _full_table(4)
+    eng = _engine(AlwaysOffload(), width=8)
+    st = eng.init_state(table)
+    mem = jnp.full((4, 8), -1.0)
+    batch = make_write_batch(jnp.asarray([1], jnp.int32),
+                             size=jnp.asarray([3], jnp.int32))
+    st, mem = eng.write(st, mem, batch, jnp.ones((1, 8)),
+                        jnp.asarray([7], jnp.int32))
+    assert mem[1].tolist() == [1, 1, 1, -1, -1, -1, -1, -1]
