@@ -23,9 +23,13 @@ def main() -> None:
 
     outs = {}
     for mode in ("direct", "staged", "adaptive"):
+        # hot_threshold is counted over per-sequence page writes: with B=8
+        # sequences hitting the same page each step, a fresh page needs
+        # threshold/B steps to turn hot — 24 keeps new pages cold (staged)
+        # for a few steps before the frequency policy flips them to direct
         eng = ServeEngine(model, params, ServeConfig(
             max_seq=128, write_mode=mode, ring_size=8, page_size=16,
-            hot_threshold=3,
+            hot_threshold=24,
         ))
         outs[mode] = eng.generate(prompts, 32)
         s = eng.stats

@@ -1,0 +1,74 @@
+"""JAX version compatibility shims (single place for API drift).
+
+The repo targets the jax_pallas container image (jax 0.4.37) but is written
+against the current public API surface. Everything that drifted between
+0.4.x and 0.5+/0.6+ is funneled through this module so call sites stay
+clean and a version bump touches one file:
+
+* ``AbstractMesh`` — 0.4.37 takes one ``((name, size), ...)`` shape tuple;
+  newer releases take ``(axis_sizes, axis_names)``. Use
+  :func:`make_abstract_mesh`.
+* ``jax.sharding.get_abstract_mesh`` / ``use_abstract_mesh`` — public in
+  newer releases; in 0.4.37 they live in ``jax._src.mesh`` as
+  ``get_abstract_mesh`` / ``set_abstract_mesh`` (and ``get`` returns an
+  empty *tuple*, not an empty mesh, when unset). :func:`get_abstract_mesh`
+  here returns the current AbstractMesh or ``None``.
+* ``Compiled.cost_analysis()`` — newer jax returns one dict; 0.4.37 returns
+  a per-device *list* of dicts. :func:`cost_analysis_dict` always returns
+  the dict.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import AbstractMesh
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int],
+                       axis_names: Sequence[str]) -> AbstractMesh:
+    """Version-agnostic ``AbstractMesh((16, 16), ("data", "model"))``."""
+    try:  # jax >= 0.5-style (axis_sizes, axis_names)
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # 0.4.37: one ((name, size), ...) tuple
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def get_abstract_mesh() -> Optional[AbstractMesh]:
+    """Current abstract-mesh context, or ``None`` when not under a mesh.
+
+    Normalizes the 0.4.37 quirks: the getter lives in ``jax._src.mesh`` and
+    yields ``()`` when no context is active; newer jax yields an *empty*
+    AbstractMesh. Callers get ``None`` in both no-mesh cases.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None:
+        from jax._src import mesh as _mesh_lib
+
+        getter = _mesh_lib.get_abstract_mesh
+    mesh = getter()
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+@contextlib.contextmanager
+def use_abstract_mesh(mesh: AbstractMesh):
+    """Enter an abstract-mesh context (newer ``jax.sharding.use_abstract_mesh``
+    or 0.4.37's ``jax._src.mesh.set_abstract_mesh``)."""
+    enter = getattr(jax.sharding, "use_abstract_mesh", None)
+    if enter is None:
+        from jax._src import mesh as _mesh_lib
+
+        enter = _mesh_lib.set_abstract_mesh
+    with enter(mesh):
+        yield
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as one flat dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -32,15 +32,29 @@ class DecisionModule:
     policy: object  # any of repro.core.policy.*
     monitor: Optional[object] = None  # ExactMonitor | CMSMonitor
 
-    def init_state(self) -> Optional[MonitorState]:
+    def init_state(self):
+        # STATEFUL policies (e.g. HysteresisPolicy) own their full routing
+        # state — monitor counters plus decision memory — behind
+        # init_state()/route(); the module just threads it through.
+        if hasattr(self.policy, "route"):
+            if self.monitor is not None:
+                raise ValueError(
+                    "stateful policies own their monitor: pass monitor=None "
+                    "and configure the monitor on the policy itself "
+                    "(a module-level monitor would silently never update)"
+                )
+            return self.policy.init_state()
         if self.monitor is not None:
             return self.monitor.init()
         return None
 
     def __call__(
-        self, state: Optional[MonitorState], batch: WriteBatch
-    ) -> Tuple[jnp.ndarray, Optional[MonitorState], DecisionStats]:
-        """-> (unload_mask bool[n], new monitor state, stats)."""
+        self, state, batch: WriteBatch
+    ) -> Tuple[jnp.ndarray, object, DecisionStats]:
+        """-> (unload_mask bool[n], new routing state, stats)."""
+        if hasattr(self.policy, "route"):
+            unload, state = self.policy.route(state, batch)
+            return unload, state, DecisionStats.from_mask(unload)
         if self.monitor is not None:
             state = self.monitor.update(state, batch.region)
         unload = self.policy.decide(state, batch)

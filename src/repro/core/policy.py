@@ -23,7 +23,7 @@ the critical path "faster than the expected savings".
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -108,27 +108,93 @@ class FrequencyPolicy:
         return (est < thr) & small
 
 
+class HysteresisState(NamedTuple):
+    """Carried state for :class:`HysteresisPolicy`: the monitor counters
+    plus each region's LAST routing decision (the hysteresis memory)."""
+
+    mon: MonitorState
+    last_unload: jnp.ndarray  # bool[n_regions] — True = region was unloaded
+
+
 @dataclasses.dataclass(frozen=True)
 class HysteresisPolicy:
-    """Beyond-paper: wrap a base policy with decision hysteresis.
+    """Beyond-paper: frequency routing with decision hysteresis.
 
-    Flapping between paths wastes staging-buffer locality; require the base
-    decision to clear a margin before switching. For FrequencyPolicy, this
-    means two thresholds (unload below lo, offload above hi); in between,
-    prefer offload (the safe default — the paper notes blind unloading can
-    worsen performance).
+    Flapping between paths wastes staging-buffer locality; require the
+    estimate to clear a margin before switching. Two thresholds: unload
+    below ``lo``, offload at/above ``hi``; IN BETWEEN each region keeps its
+    last decision (carried in :class:`HysteresisState`). The memory starts
+    on the offload side (the safe default — the paper notes blind
+    unloading can worsen performance); it only matters in the mid-band,
+    since fresh regions sit at count 0 < ``lo`` and unload exactly like
+    ``FrequencyPolicy``.
+
+    The last-decision table needs a bounded region universe: ``n_regions``
+    (explicit, or taken from an ``ExactMonitor``). Region ids beyond it
+    (possible under a ``CMSMonitor``, which exists precisely for huge
+    universes) are bucketed ``region % n_regions`` — deterministic
+    aliasing of the decision memory, never a silent drop: hysteresis
+    still applies per bucket, mirroring how the sketch itself aliases
+    counts.
     """
 
     monitor: Monitor = dataclasses.field(default_factory=lambda: ExactMonitor(1 << 20))
     lo: int = 2
     hi: int = 8
+    n_regions: Optional[int] = None
     max_unload_size: int = 4096
     needs_monitor: bool = True
 
-    def decide(self, state: MonitorState, batch: WriteBatch) -> jnp.ndarray:
-        est = self.monitor.query(state, batch.region)
-        small = batch.size <= self.max_unload_size
-        return (est < self.lo) & small
+    def _n_regions(self) -> int:
+        n = self.n_regions or getattr(self.monitor, "n_regions", None)
+        if n is None:
+            raise ValueError(
+                "HysteresisPolicy needs n_regions (or an ExactMonitor) "
+                "for the last-decision table"
+            )
+        return int(n)
+
+    def init_state(self) -> HysteresisState:
+        return HysteresisState(
+            mon=self.monitor.init(),
+            last_unload=jnp.zeros((self._n_regions(),), jnp.bool_),
+        )
+
+    def _band(self, est: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+        return jnp.where(est < self.lo, True,
+                         jnp.where(est >= self.hi, False, prev))
+
+    def route(self, state: HysteresisState,
+              batch: WriteBatch) -> Tuple[jnp.ndarray, HysteresisState]:
+        """Stateful hot path: update counters, apply the lo/hi bands with
+        the carried per-region decision, record the new decisions.
+
+        The memory stores the BAND decision, pre-size-gate: a large write
+        is forced onto the offload path but must not flip the region's
+        hotness memory — and since duplicates of a region within a batch
+        share (est, prev), the recorded value is identical per region
+        (deterministic scatter regardless of XLA duplicate-index order).
+        """
+        mon = self.monitor.update(state.mon, batch.region)
+        est = self.monitor.query(mon, batch.region)
+        bucket = batch.region % state.last_unload.shape[0]
+        prev = state.last_unload[bucket]
+        band = self._band(est, prev)
+        last = state.last_unload.at[bucket].set(band)
+        unload = band & (batch.size <= self.max_unload_size)
+        return unload, HysteresisState(mon, last)
+
+    def decide(self, state, batch: WriteBatch) -> jnp.ndarray:
+        """Read-only decision (no counter update, no memory write). Accepts
+        either a :class:`HysteresisState` or a bare ``MonitorState`` (then
+        mid-band falls back to the safe default, offload)."""
+        if isinstance(state, HysteresisState):
+            bucket = batch.region % state.last_unload.shape[0]
+            mon_state, prev = state.mon, state.last_unload[bucket]
+        else:
+            mon_state, prev = state, jnp.zeros((batch.n,), jnp.bool_)
+        est = self.monitor.query(mon_state, batch.region)
+        return self._band(est, prev) & (batch.size <= self.max_unload_size)
 
 
 def top_k_hot_table(counts: jnp.ndarray, k: int) -> jnp.ndarray:

@@ -1,0 +1,278 @@
+"""Unified staging-ring abstraction — THE single implementation of the
+paper's §3.1 unload-path machinery (see DESIGN.md §1).
+
+Every unload path in the repo — the flat ``RemoteWriteEngine`` memory ring
+(``core.unload`` / ``core.staged_write``) and the decode-time KV-cache
+overlay (``kvcache.staged``) — is an *instantiation* of this module. What
+exists exactly once here:
+
+* **cursor / wrap / overflow accounting** — :func:`assign_slots`,
+  :func:`free_slots`, :func:`free_ahead`, :func:`need_drain`, :func:`full`;
+* **conflict detection** (destination already staged and undrained ->
+  forced drain preserves cross-batch program order) — :func:`conflicts`;
+* **uMTT validation + reject accounting** at drain time —
+  :func:`drain_mask`;
+* **the drain copy** — :func:`scatter_rows` (full-row entries; dispatches
+  to the ``staged_scatter`` Pallas kernel on TPU) and :func:`scatter_elems`
+  (partial-row entries; the jnp oracle, and also the OFFLOAD path's direct
+  scatter, so both paths land in memory through the same primitive —
+  ordering/functional parity by construction).
+
+State model
+-----------
+:class:`RingState` carries only the bookkeeping every ring shares: a
+``live`` occupancy mask and the ``head`` append cursor. Per-entry
+*metadata* (destination region/offset/stag for the flat ring, destination
+cache slot for the KV ring) and *payload planes* (packed rows, or the
+[L, B, R, H, Dh] KV tiles) have instantiation-specific shapes; they live
+with the instantiation and are updated through :func:`record` /
+:func:`push_column` at slots this module assigns. The ring axis is ALWAYS
+the last axis of ``live`` (lead axes, e.g. batch lanes, broadcast before
+it). Everything is fixed-shape and jit/scan-compatible.
+
+Two accounting modes (both drain-before-overflow, DESIGN.md §1.2):
+
+* **wrap** (flat engine): slots are reused after a drain; the cursor keeps
+  advancing modulo capacity and occupancy is counted from ``live``.
+* **dense** (KV overlay): entries are appended at 0..head and the whole
+  ring is reset (head -> 0) on drain, so ``capacity - head`` columns remain.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import umtt as U
+
+
+class RingState(NamedTuple):
+    """Shared staging-ring bookkeeping.
+
+    live: bool[..., cap] — slot holds an undrained entry (ring axis last;
+          optional lead axes are per-lane validity, e.g. per batch row).
+    head: int32 scalar — next append position (modulo capacity).
+    """
+
+    live: jnp.ndarray
+    head: jnp.ndarray
+
+
+def make(capacity: int, lead: Tuple[int, ...] = ()) -> RingState:
+    return RingState(
+        live=jnp.zeros(lead + (capacity,), jnp.bool_),
+        head=jnp.zeros((), jnp.int32),
+    )
+
+
+def capacity(state: RingState) -> int:
+    return state.live.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# occupancy / overflow accounting
+# ---------------------------------------------------------------------------
+
+
+def _column_used(state: RingState) -> jnp.ndarray:
+    """bool[cap]: column holds a live entry in any lane."""
+    used = state.live
+    while used.ndim > 1:
+        used = jnp.any(used, axis=0)
+    return used
+
+
+def free_slots(state: RingState) -> jnp.ndarray:
+    """Wrap mode: columns holding no live entry (reusable after drain)."""
+    return capacity(state) - jnp.sum(_column_used(state).astype(jnp.int32))
+
+
+def free_ahead(state: RingState) -> jnp.ndarray:
+    """Dense mode: columns ahead of the cursor (ring resets on drain)."""
+    return capacity(state) - state.head
+
+
+def need_drain(state: RingState, incoming, *, wrap: bool = True) -> jnp.ndarray:
+    """True if appending ``incoming`` more entries could overwrite live data."""
+    free = free_slots(state) if wrap else free_ahead(state)
+    return free < incoming
+
+
+def full(state: RingState, *, wrap: bool = True) -> jnp.ndarray:
+    return need_drain(state, 1, wrap=wrap)
+
+
+# ---------------------------------------------------------------------------
+# append
+# ---------------------------------------------------------------------------
+
+
+def assign_slots(state: RingState, mask: jnp.ndarray) -> jnp.ndarray:
+    """Slots for a masked batched append: slot = head + rank among staged.
+
+    Staging writes are CONTIGUOUS by construction (this is the whole point:
+    the ring is small and sequentially written, hence "MTT-cache-resident"
+    in the paper and dense/fusable on TPU). Non-staged requests get the
+    out-of-range sentinel ``capacity`` (NOT -1: negative indices wrap).
+    """
+    cap = capacity(state)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    return jnp.where(mask, (state.head + rank) % cap, cap)
+
+
+def append(state: RingState, mask: jnp.ndarray) -> Tuple[RingState, jnp.ndarray]:
+    """Assign slots for the masked entries, mark them live, advance the
+    cursor. Returns (state, slots[n] with sentinel=capacity)."""
+    cap = capacity(state)
+    slots = assign_slots(state, mask)
+    state = RingState(
+        live=state.live.at[..., slots].set(mask, mode="drop"),
+        head=(state.head + jnp.sum(mask.astype(jnp.int32))) % cap,
+    )
+    return state, slots
+
+
+def record(arrays, slots: jnp.ndarray, values) -> "jax.Array | tuple | dict":
+    """Scatter per-entry metadata/payload ``values`` (pytree of [n, ...]) into
+    ring-axis-LEADING ``arrays`` ([cap, ...]) at ``slots`` (sentinel drops)."""
+    return jax.tree.map(
+        lambda buf, v: buf.at[slots].set(v, mode="drop"), arrays, values
+    )
+
+
+def push_column(buf: jnp.ndarray, head: jnp.ndarray, column: jnp.ndarray,
+                axis: int = -1) -> jnp.ndarray:
+    """Write one entry ``column`` at ring position ``head`` of ``buf``.
+
+    ``axis`` locates the ring axis in ``buf``; ``column`` is ``buf`` without
+    that axis (lane-style metadata like [B, cap] slot tables, or payload
+    planes like [B, R, H, Dh] with axis=1).
+    """
+    axis = axis % buf.ndim
+    starts = [jnp.zeros((), jnp.int32)] * buf.ndim
+    starts[axis] = head
+    return lax.dynamic_update_slice(buf, jnp.expand_dims(column, axis),
+                                    tuple(starts))
+
+
+def reset(state: RingState, *, rewind: bool = False) -> RingState:
+    """Empty the ring after a drain. ``rewind`` resets the cursor too
+    (dense mode); wrap mode keeps it (slots are reused in place)."""
+    return RingState(
+        live=jnp.zeros_like(state.live),
+        head=jnp.zeros_like(state.head) if rewind else state.head,
+    )
+
+
+# ---------------------------------------------------------------------------
+# conflict detection (ordering parity, DESIGN.md §1.3)
+# ---------------------------------------------------------------------------
+
+
+def conflicts(
+    state: RingState,
+    stored_keys: Sequence[jnp.ndarray],
+    incoming_keys: Sequence[jnp.ndarray],
+) -> jnp.ndarray:
+    """True if any incoming write targets a destination with a pending
+    (undrained) staged entry — the caller must drain first so cross-batch
+    program order per destination is preserved.
+
+    ``stored_keys``: per-entry destination key components, each shaped like
+    ``state.live`` ([..., cap]). ``incoming_keys``: matching components of
+    the incoming writes, each [..., n] (lead axes as in ``live``). A
+    conflict needs ALL components equal on a live entry.
+    """
+    hit = state.live[..., None, :]  # [..., 1, cap]
+    for stored, incoming in zip(stored_keys, incoming_keys):
+        hit = hit & (incoming[..., :, None] == stored[..., None, :])
+    return jnp.any(hit)
+
+
+# ---------------------------------------------------------------------------
+# drain: uMTT validation + the two scatter primitives
+# ---------------------------------------------------------------------------
+
+
+def drain_mask(
+    state: RingState,
+    table: Optional[U.UMTT],
+    region: Optional[jnp.ndarray] = None,
+    stag: Optional[jnp.ndarray] = None,
+    *,
+    need_perm: int = U.PERM_WRITE,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-entry drain eligibility: live AND (when a uMTT is attached)
+    passing the security check. Returns (ok mask, n_rejected).
+
+    This is the ONE place staged entries meet the uMTT (security parity,
+    paper §3.1): every instantiation's drain routes through here. With
+    ``table=None`` (trusted instantiations, e.g. the in-model KV overlay
+    whose destinations are engine-computed, never initiator-supplied) all
+    live entries are eligible and nothing is rejected.
+    """
+    if table is None:
+        return state.live, jnp.zeros((), jnp.int32)
+    ok = U.validate(table, region, stag, need_perm=need_perm) & state.live
+    n_rejected = jnp.sum((state.live & ~ok).astype(jnp.int32))
+    return ok, n_rejected
+
+
+def scatter_rows(
+    dest: jnp.ndarray,     # [R, W]
+    staging: jnp.ndarray,  # [N, W]
+    rows: jnp.ndarray,     # int32[N]
+    ok: jnp.ndarray,       # bool[N]
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Full-row drain: staged row i -> dest[rows[i]] where ok[i].
+
+    The single dispatch point for the ``staged_scatter`` Pallas kernel
+    (TPU path); the jnp branch is its oracle and the CPU path.
+    PRECONDITION (DESIGN.md §2): valid rows are unique within one drain —
+    guaranteed by conflict-forced drains (:func:`conflicts`).
+    """
+    if use_kernel:
+        if interpret:  # forced interpret mode (kernel-vs-oracle tests)
+            from ..kernels.staged_scatter import staged_scatter as _raw
+
+            return _raw(dest, staging, rows, ok, interpret=True)
+        from ..kernels import staged_scatter  # ops wrapper: TPU kernel,
+                                              # interpret/ref on CPU
+        return staged_scatter(dest, staging, rows, ok)
+    idx = jnp.where(ok, rows, dest.shape[0])  # sentinel past the end drops
+    return dest.at[idx].set(
+        staging.astype(dest.dtype), mode="drop", unique_indices=True
+    )
+
+
+def scatter_elems(
+    mem: jnp.ndarray,      # [n_regions, region_width]
+    payload: jnp.ndarray,  # [N, width]
+    region: jnp.ndarray,   # int32[N]
+    offset: jnp.ndarray,   # int32[N]
+    size: jnp.ndarray,     # int32[N]
+    ok: jnp.ndarray,       # bool[N]
+) -> jnp.ndarray:
+    """Partial-row scatter: payload[i, :size[i]] -> mem[region[i],
+    offset[i]:offset[i]+size[i]] where ok[i].
+
+    Used by BOTH the flat ring's drain and the offload path's direct
+    scatter (``RemoteWriteEngine.write_direct``) — data/final-location
+    parity between the two paths is structural, not tested-for.
+    """
+    width = payload.shape[1]
+    lane = jnp.arange(width)[None, :]
+    elem = ok[:, None] & (lane < size[:, None])
+    # sentinel must be OUT OF RANGE (mem.size), not -1 (negative wraps!)
+    flat_idx = jnp.where(
+        elem, region[:, None] * mem.shape[1] + offset[:, None] + lane, mem.size
+    )
+    new_flat = mem.reshape(-1).at[flat_idx.reshape(-1)].set(
+        payload.reshape(-1).astype(mem.dtype), mode="drop"
+    )
+    return new_flat.reshape(mem.shape)

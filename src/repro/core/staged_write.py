@@ -25,6 +25,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import ring as R
 from . import umtt as U
 from . import unload as UL
 from .decision import DecisionModule
@@ -65,22 +66,14 @@ class RemoteWriteEngine:
         mem: jnp.ndarray, batch: WriteBatch, payload: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
     ) -> jnp.ndarray:
-        """Direct scatter to (region, offset). mask selects participating rows."""
-        n, width = payload.shape
-        lane = jnp.arange(width)[None, :]
-        elem = lane < batch.size[:, None]
-        if mask is not None:
-            elem &= mask[:, None]
-        # NOTE: sentinel must be OUT OF RANGE (not -1 — negative wraps!)
-        dst = jnp.where(
-            elem,
-            batch.region[:, None] * mem.shape[1] + batch.offset[:, None] + lane,
-            mem.size,
-        )
-        flat = mem.reshape(-1).at[dst.reshape(-1)].set(
-            payload.reshape(-1).astype(mem.dtype), mode="drop"
-        )
-        return flat.reshape(mem.shape)
+        """Direct scatter to (region, offset). mask selects participating rows.
+
+        Same ``ring.scatter_elems`` primitive the unload path drains
+        through — data/final-location parity between paths is structural.
+        """
+        ok = jnp.ones((batch.n,), jnp.bool_) if mask is None else mask
+        return R.scatter_elems(mem, payload, batch.region, batch.offset,
+                               batch.size, ok)
 
     # -- ordering parity (beyond-paper; see DESIGN.md) -----------------------
     @staticmethod
@@ -98,13 +91,9 @@ class RemoteWriteEngine:
     def _conflicts_ring(ring: UL.StagingRing, batch: WriteBatch) -> jnp.ndarray:
         """True if any incoming write targets a destination with a pending
         (undrained) staged entry — forces a drain first, so cross-batch
-        program order per destination is preserved."""
-        hit = (
-            (batch.region[:, None] == ring.region[None, :])
-            & (batch.offset[:, None] == ring.offset[None, :])
-            & ring.live[None, :]
-        )
-        return jnp.any(hit)
+        program order per destination is preserved (shared ``ring.conflicts``
+        logic, keyed on (region, offset))."""
+        return UL.conflicts(ring, batch.region, batch.offset)
 
     # -- combined write --------------------------------------------------------
     def write(

@@ -1,4 +1,6 @@
-"""Unload module (paper §3.1): staging ring buffer + drain.
+"""Unload module (paper §3.1): the FLAT staging ring + drain, built on the
+unified ring abstraction in ``repro.core.ring`` (the KV-cache overlay in
+``repro.kvcache.staged`` is the other instantiation — see DESIGN.md §1).
 
 The unload path replaces a write to an arbitrary destination region with
 
@@ -13,7 +15,9 @@ The unload path replaces a write to an arbitrary destination region with
 Entries carry (region, offset, size, stag) alongside the payload — the
 paper packs the destination address into the writeImm payload and the stag
 into the immediate value; we keep them as separate arrays of one staging
-record.
+record. Cursor/wrap/overflow accounting, conflict detection, uMTT-validated
+drain eligibility, and the scatter primitives all come from ``core.ring``;
+this module only binds them to the flat (region, offset) address space.
 
 Everything is fixed-shape and jit-compatible; the ring state is a pytree
 carried through training/serving steps.
@@ -25,19 +29,32 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import ring as R
 from . import umtt as U
 
 
 class StagingRing(NamedTuple):
-    """Target-side staging buffer (one per queue pair in the paper)."""
+    """Target-side staging buffer (one per queue pair in the paper).
+
+    Payload + destination metadata are per-entry arrays (ring axis leading);
+    occupancy and the append cursor live in the shared ``ring.RingState``.
+    """
 
     payload: jnp.ndarray  # [cap, width] staged payloads
     region: jnp.ndarray   # int32[cap] destination region id
     offset: jnp.ndarray   # int32[cap] element offset within the region
     size: jnp.ndarray     # int32[cap] valid payload elements
     stag: jnp.ndarray     # int32[cap] steering tag for the uMTT check
-    live: jnp.ndarray     # bool[cap] slot holds an undrained entry
-    head: jnp.ndarray     # int32 scalar — next slot to write (append cursor)
+    state: R.RingState    # shared bookkeeping (live mask + head cursor)
+
+    # Back-compat views (callers/tests predate the unified abstraction).
+    @property
+    def live(self) -> jnp.ndarray:
+        return self.state.live
+
+    @property
+    def head(self) -> jnp.ndarray:
+        return self.state.head
 
 
 def make_ring(capacity: int, width: int, dtype=jnp.float32) -> StagingRing:
@@ -47,8 +64,7 @@ def make_ring(capacity: int, width: int, dtype=jnp.float32) -> StagingRing:
         offset=jnp.zeros((capacity,), jnp.int32),
         size=jnp.zeros((capacity,), jnp.int32),
         stag=jnp.zeros((capacity,), jnp.int32),
-        live=jnp.zeros((capacity,), jnp.bool_),
-        head=jnp.zeros((), jnp.int32),
+        state=R.make(capacity),
     )
 
 
@@ -63,35 +79,30 @@ def append(
 ) -> Tuple[StagingRing, jnp.ndarray]:
     """Sequential append of masked entries at the ring head.
 
-    Staging writes are CONTIGUOUS by construction (slot = head + rank of
-    the request among unloaded ones) — this is the whole point: the ring
-    is small and sequentially written, hence "MTT-cache-resident" in the
-    paper and dense/fusable on TPU.
-
-    Returns (new ring, slot[n] — assigned slot per request, -1 if not
-    staged). Entries beyond capacity wrap (callers drain before overflow;
-    ``need_drain`` exposes the watermark).
+    Slot assignment (contiguous, wrap-around, sentinel = capacity for
+    non-staged requests) is ``ring.append``; this records the flat-ring
+    entry record at the assigned slots. Callers drain before overflow
+    (``need_drain`` exposes the watermark).
     """
-    cap = ring.payload.shape[0]
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1  # rank among staged
-    # sentinel must be out of range (cap), not -1 (negative indices wrap)
-    slot = jnp.where(mask, (ring.head + rank) % cap, cap)
-    ring = StagingRing(
-        payload=ring.payload.at[slot].set(payload, mode="drop"),
-        region=ring.region.at[slot].set(region, mode="drop"),
-        offset=ring.offset.at[slot].set(offset, mode="drop"),
-        size=ring.size.at[slot].set(size, mode="drop"),
-        stag=ring.stag.at[slot].set(stag, mode="drop"),
-        live=ring.live.at[slot].set(mask, mode="drop"),
-        head=(ring.head + jnp.sum(mask.astype(jnp.int32))) % cap,
+    state, slot = R.append(ring.state, mask)
+    recorded = R.record(
+        (ring.payload, ring.region, ring.offset, ring.size, ring.stag),
+        slot,
+        (payload, region, offset, size, stag),
     )
-    return ring, slot
+    return StagingRing(*recorded, state=state), slot
 
 
 def need_drain(ring: StagingRing, incoming: int) -> jnp.ndarray:
     """True if appending ``incoming`` more entries could overwrite live data."""
-    free = ring.payload.shape[0] - jnp.sum(ring.live.astype(jnp.int32))
-    return free < incoming
+    return R.need_drain(ring.state, incoming, wrap=True)
+
+
+def conflicts(ring: StagingRing, region: jnp.ndarray,
+              offset: jnp.ndarray) -> jnp.ndarray:
+    """True if any incoming (region, offset) destination has a pending
+    staged entry (forces a drain first — ordering parity)."""
+    return R.conflicts(ring.state, (ring.region, ring.offset), (region, offset))
 
 
 def drain(
@@ -103,23 +114,14 @@ def drain(
     payloads to their destination regions. Returns (empty ring, new mem,
     n_rejected — entries that failed the security check).
 
-    On TPU the copy loop is the ``staged_scatter`` Pallas kernel
-    (repro.kernels); this jnp version is its oracle and the CPU path.
+    Validation + reject accounting is ``ring.drain_mask``; the copy is
+    ``ring.scatter_elems`` (partial-row writes; the same primitive the
+    offload path scatters through, so parity is structural). Full-row
+    instantiations drain through ``ring.scatter_rows`` -> the
+    ``staged_scatter`` Pallas kernel on TPU.
     """
-    ok = U.validate(table, ring.region, ring.stag) & ring.live
-    width = ring.payload.shape[1]
-    lane = jnp.arange(width)[None, :]
-    elem_mask = ok[:, None] & (lane < ring.size[:, None])
-
-    # scatter rows into mem[region, offset:offset+width] where valid
-    # (sentinel = mem.size, out of range -> dropped; -1 would wrap)
-    dst_col = ring.offset[:, None] + lane
-    flat_idx = jnp.where(
-        elem_mask, ring.region[:, None] * mem.shape[1] + dst_col, mem.size
-    )
-    new_flat = mem.reshape(-1).at[flat_idx.reshape(-1)].set(
-        ring.payload.reshape(-1).astype(mem.dtype), mode="drop"
-    )
-    n_rejected = jnp.sum((ring.live & ~ok).astype(jnp.int32))
-    empty = ring._replace(live=jnp.zeros_like(ring.live))
-    return empty, new_flat.reshape(mem.shape), n_rejected
+    ok, n_rejected = R.drain_mask(ring.state, table, ring.region, ring.stag)
+    mem = R.scatter_elems(mem, ring.payload, ring.region, ring.offset,
+                          ring.size, ok)
+    empty = ring._replace(state=R.reset(ring.state))  # wrap mode: keep head
+    return empty, mem, n_rejected

@@ -104,20 +104,26 @@ class Pipeline:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
-    def _worker(self):
+    def _worker(self, stop: threading.Event, q: "queue.Queue"):
+        # stop/q are BOUND at thread start: a worker that outlives its
+        # epoch (join timeout in stop()) keeps seeing its own set event and
+        # its own orphaned queue, and can never publish stale batches into
+        # a restarted pipeline
         s = self.step
-        while not self._stop.is_set():
+        while not stop.is_set():
             batch = self.source.batch_at(s)
-            while not self._stop.is_set():
+            while not stop.is_set():
                 try:
-                    self._q.put((s, batch), timeout=0.1)
+                    q.put((s, batch), timeout=0.1)
                     break
                 except queue.Full:
                     continue
             s += 1
 
     def start(self) -> "Pipeline":
-        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread = threading.Thread(
+            target=self._worker, args=(self._stop, self._q), daemon=True
+        )
         self._thread.start()
         return self
 
@@ -131,6 +137,11 @@ class Pipeline:
             except queue.Empty:
                 pass
             self._thread.join(timeout=2)
+            self._thread = None
+            # retire this epoch's queue: the worker may still complete one
+            # put() on its way out (or be alive past the join timeout) —
+            # a restart (skip_to) must never serve a stale pre-skip batch
+            self._q = queue.Queue(maxsize=self._q.maxsize)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self
@@ -150,7 +161,6 @@ class Pipeline:
         if was_running:
             self.stop()
             self._stop = threading.Event()
-            self._thread = None
         self.step = step
         if was_running:
             self.start()

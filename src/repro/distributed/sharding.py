@@ -35,6 +35,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..compat import make_abstract_mesh  # noqa: F401  (re-export: the
+# version-agnostic AbstractMesh constructor lives next to the rules that
+# consume it — tests and launch code build abstract meshes through here)
 from ..configs.base import ModelConfig
 
 

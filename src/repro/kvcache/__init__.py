@@ -1,5 +1,6 @@
 """KV-cache substrate: dense caches with staged-ring overlay (unload path
-for decode writes) and a paged pool with page-frequency monitoring."""
+for decode writes, instantiating the unified ``core.ring`` abstraction) and
+a paged pool with page-frequency monitoring."""
 from .paged import (
     PagedCache,
     PageMonitor,
@@ -15,9 +16,13 @@ from .staged import (
     maybe_drain,
     overlay_kv,
     overlay_masks,
-    ring_append,
+    overlay_step,
     ring_commit,
+    ring_conflicts,
     ring_full,
+    ring_state,
+    ring_validity,
+    stage_tile,
     strip_ring,
 )
 
@@ -25,5 +30,6 @@ __all__ = [
     "PagedCache", "PageMonitor", "allocate_pages", "direct_insert",
     "gather_kv", "make_paged_cache", "write_destination",
     "add_ring", "drain_ring", "maybe_drain", "overlay_kv", "overlay_masks",
-    "ring_append", "ring_commit", "ring_full", "strip_ring",
+    "overlay_step", "ring_commit", "ring_conflicts", "ring_full",
+    "ring_state", "ring_validity", "stage_tile", "strip_ring",
 ]

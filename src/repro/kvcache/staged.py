@@ -1,4 +1,7 @@
-"""Staged KV-cache writes: the unload path for decode-time KV insertion.
+"""Staged KV-cache writes: the unload path for decode-time KV insertion,
+built on the unified ring abstraction in ``repro.core.ring`` (the flat
+``RemoteWriteEngine`` ring in ``core.unload`` is the other instantiation —
+see DESIGN.md §1).
 
 Decode writes one (k, v) tile per layer per step into an arbitrary slot of a
 large cache — the RDMA-write analogue (random destination page). Three
@@ -14,21 +17,26 @@ write paths, mirroring the paper:
   cache ∪ ring (concatenated along the sequence axis with a validity mask —
   no correctness gap while entries are staged). Every R steps the ring is
   DRAINED into the main cache with one regular bulk copy
-  (``kernels.staged_scatter``) — R scattered writes become 1 dense copy.
+  (``core.ring.scatter_rows`` -> the ``staged_scatter`` Pallas kernel) —
+  R scattered writes become 1 dense copy.
 * ADAPTIVE: the decision module (page-frequency counters over destination
   pages) picks per-sequence: hot pages direct, cold staged.
 
-State lives in the cache pytree so the whole thing jits and scans.
+State lives in the cache pytree (``ring_k``/``ring_v`` payload planes,
+``ring_slot`` destination metadata, ``ring_fill`` cursor — names are stable
+for the sharding rules and checkpoints) but ALL ring logic — validity,
+overflow, conflict-forced drains, the drain copy — delegates to
+``core.ring`` on a :func:`ring_state` view. The whole thing jits and scans.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..kernels import staged_scatter
+from ..core import ring as R
 
 Cache = Dict[str, jnp.ndarray]
 
@@ -50,57 +58,120 @@ def strip_ring(cache: Cache) -> Cache:
     return {k: v for k, v in cache.items() if not k.startswith("ring_")}
 
 
-def ring_append(cache: Cache, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
-                layer_idx: jnp.ndarray, slots: jnp.ndarray) -> Cache:
-    """Append one layer's new KV tile at the ring cursor (during scan,
-    ``layer_idx`` selects the ring plane; cursor advances once per step via
-    ``ring_commit``)."""
-    k_new, v_new = layer_kv  # [B, 1, H, Dh]
-    cur = cache["ring_fill"]
-    cache = dict(cache)
-    cache["ring_k"] = lax.dynamic_update_slice(
-        cache["ring_k"], k_new[None], (layer_idx, 0, cur, 0, 0)
+def ring_state(cache: Cache) -> R.RingState:
+    """Shared-bookkeeping view of the cache's ring fields (dense mode:
+    entries occupy columns [0, fill); a lane is live where a destination
+    slot was recorded)."""
+    r = cache["ring_slot"].shape[1]
+    filled = jnp.arange(r)[None, :] < cache["ring_fill"]
+    return R.RingState(
+        live=filled & (cache["ring_slot"] >= 0),
+        head=cache["ring_fill"],
     )
-    cache["ring_v"] = lax.dynamic_update_slice(
-        cache["ring_v"], v_new[None], (layer_idx, 0, cur, 0, 0)
-    )
-    return cache
 
 
-def ring_commit(cache: Cache, slots: jnp.ndarray) -> Cache:
-    """Record destination slots for this step's entries and advance cursor."""
+def ring_validity(cache: Cache) -> jnp.ndarray:
+    """bool [B, R]: ring entries holding live (undrained) KV."""
+    return ring_state(cache).live
+
+
+def ring_full(cache: Cache) -> jnp.ndarray:
+    return R.full(ring_state(cache), wrap=False)
+
+
+def ring_conflicts(cache: Cache, slots: jnp.ndarray) -> jnp.ndarray:
+    """True if this step's destination ``slots`` [B] collide with a pending
+    staged entry for the same sequence — the drain must run first so the
+    drain batch keeps unique destination rows (the ``scatter_rows`` /
+    ``staged_scatter`` precondition) and program order per slot holds."""
+    return R.conflicts(ring_state(cache), (cache["ring_slot"],),
+                       (slots[:, None],))
+
+
+def stage_tile(plane: jnp.ndarray, tile: jnp.ndarray,
+               cur: jnp.ndarray) -> jnp.ndarray:
+    """Append one layer's new KV tile [B, 1, H, Dh] at ring column ``cur``
+    of a per-layer ring plane [B, R, H, Dh] (used inside the layer scan)."""
+    return R.push_column(plane, cur, tile[:, 0], axis=1)
+
+
+def ring_commit(cache: Cache, slots: jnp.ndarray,
+                unload_mask: jnp.ndarray) -> Cache:
+    """Record this step's destination slots (-1 for sequences that wrote
+    direct) at the cursor and advance it. The payload tiles were staged per
+    layer by ``stage_tile``; this is the metadata half of the append."""
     cur = cache["ring_fill"]
+    rows = jnp.where(unload_mask, slots, -1).astype(jnp.int32)
     cache = dict(cache)
-    cache["ring_slot"] = lax.dynamic_update_slice(
-        cache["ring_slot"], slots[:, None], (0, cur)
-    )
+    cache["ring_slot"] = R.push_column(cache["ring_slot"], cur, rows)
     cache["ring_fill"] = cur + 1
     return cache
 
 
-def ring_full(cache: Cache) -> jnp.ndarray:
-    return cache["ring_fill"] >= cache["ring_slot"].shape[1]
+def _shadowed(cache: Cache, b: int, clen: int,
+              extra_slot: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """bool [B, S]: main-cache slots whose authoritative value is pending
+    in the ring (must be excluded from the base attention mask). The ONE
+    implementation of shadowing — ``overlay_masks`` and ``overlay_step``
+    both build on it. ``extra_slot`` [B] adds one per-sequence slot
+    (sentinel ``clen`` = none), e.g. the entry being staged this step."""
+    live = ring_validity(cache)
+    src = jnp.where(live, cache["ring_slot"], clen)  # clen = none
+    shadowed = jnp.zeros((b, clen + 1), jnp.bool_)
+    shadowed = shadowed.at[jnp.arange(b)[:, None], src].set(True)
+    if extra_slot is not None:
+        shadowed = shadowed.at[jnp.arange(b), extra_slot].set(True)
+    return shadowed[:, :clen]
+
+
+def overlay_step(
+    cache: Cache,
+    vmask: jnp.ndarray,        # bool [B, S] main-cache validity after write
+    slots: jnp.ndarray,        # int32 [B] this step's destination slots
+    unload_mask: jnp.ndarray,  # bool [B] True = stage, False = direct
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-step overlay bookkeeping for ``decode_step``.
+
+    Returns (full_mask [B, S+R] attention validity over cache ∪ ring,
+    direct_slots [B] main-cache rows for the direct subset (sentinel = S
+    drops staged sequences), cur — the ring column this step appends to).
+
+    The authoritative value for a staged entry lives in the RING until
+    drained, so its main-cache slot is shadowed out of the base mask.
+    """
+    b, clen = vmask.shape
+    r = cache["ring_slot"].shape[1]
+    cur = cache["ring_fill"]
+    # this step's entry (appended at column cur) is valid where unloaded
+    ring_valid = ring_validity(cache) | (
+        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
+    )
+    slot_now = jnp.where(unload_mask, slots, clen)
+    shadowed = _shadowed(cache, b, clen, extra_slot=slot_now)
+    full_mask = jnp.concatenate([vmask & ~shadowed, ring_valid], axis=1)
+    direct_slots = jnp.where(unload_mask, clen, slots)
+    return full_mask, direct_slots, cur
 
 
 def drain_ring(cache: Cache, use_kernel: bool = True) -> Cache:
     """Bulk-copy all staged entries to their main-cache slots, empty ring.
 
-    The copy is the staged_scatter drain: per (layer, batch), ring rows
-    [R, H*Dh] land at rows ``ring_slot[b]`` of the cache's [S, H*Dh] view.
+    The copy is the unified drain primitive ``core.ring.scatter_rows``
+    (-> ``staged_scatter`` Pallas kernel on TPU, jnp oracle elsewhere):
+    per (layer, batch), ring rows [R, H*Dh] land at rows ``ring_slot[b]``
+    of the cache's [S, H*Dh] view.
     """
     l, b, r, h, dh = cache["ring_k"].shape
     s = cache["k"].shape[2]
-    valid = (jnp.arange(r) < cache["ring_fill"])[None, :] & (cache["ring_slot"] >= 0)
+    valid = ring_validity(cache)
 
     def drain_one(dest, staging, slots, ok):
         # dest [S, H, Dh]; staging [R, H, Dh]
-        if use_kernel:
-            out = staged_scatter(
-                dest.reshape(s, h * dh), staging.reshape(r, h * dh), slots, ok
-            )
-            return out.reshape(s, h, dh)
-        idx = jnp.where(ok, slots, s)
-        return dest.at[idx].set(staging, mode="drop", unique_indices=True)
+        out = R.scatter_rows(
+            dest.reshape(s, h * dh), staging.reshape(r, h * dh), slots, ok,
+            use_kernel=use_kernel,
+        )
+        return out.reshape(s, h, dh)
 
     def drain_layer(dest_l, staging_l):
         return jax.vmap(drain_one, in_axes=(0, 0, 0, 0))(
@@ -114,18 +185,33 @@ def drain_ring(cache: Cache, use_kernel: bool = True) -> Cache:
         k=new_k,
         v=new_v,
         ring_slot=jnp.full_like(cache["ring_slot"], -1),
-        ring_fill=jnp.zeros((), jnp.int32),
+        ring_fill=jnp.zeros_like(cache["ring_fill"]),  # dense mode: rewind
     )
 
 
-def maybe_drain(cache: Cache, use_kernel: bool = False) -> Cache:
-    """Fixed-shape conditional drain (serve-loop safe)."""
-    return lax.cond(
-        ring_full(cache),
+def maybe_drain(
+    cache: Cache,
+    use_kernel: bool = False,
+    incoming_slots: Optional[jnp.ndarray] = None,
+) -> Tuple[Cache, jnp.ndarray]:
+    """Fixed-shape conditional drain (serve-loop safe).
+
+    Drains when the ring is full OR (when ``incoming_slots`` is given) when
+    the NEXT step's destinations conflict with pending entries — the
+    conflict-forced drain that keeps drain batches unique-destination.
+    Returns (cache, drained bool) so jitted loops can count drains on
+    device.
+    """
+    due = ring_full(cache)
+    if incoming_slots is not None:
+        due = due | ring_conflicts(cache, incoming_slots)
+    cache = lax.cond(
+        due,
         lambda c: drain_ring(c, use_kernel=use_kernel),
         lambda c: dict(c),
         cache,
     )
+    return cache, due
 
 
 def overlay_masks(cache: Cache, base_mask: jnp.ndarray) -> jnp.ndarray:
@@ -136,15 +222,9 @@ def overlay_masks(cache: Cache, base_mask: jnp.ndarray) -> jnp.ndarray:
     (the authoritative value lives in the ring until drained).
     """
     b, s = base_mask.shape
-    r = cache["ring_slot"].shape[1]
-    fill = cache["ring_fill"]
-    ring_valid = (jnp.arange(r)[None, :] < fill) & (cache["ring_slot"] >= 0)
-    # exclude undrained slots from the main mask
-    slot_oh = jax.nn.one_hot(
-        jnp.where(ring_valid, cache["ring_slot"], s), s + 1, dtype=jnp.bool_
-    )[..., :s]  # [B, R, S]
-    shadowed = jnp.any(slot_oh, axis=1)
-    return jnp.concatenate([base_mask & ~shadowed, ring_valid], axis=1)
+    shadowed = _shadowed(cache, b, s)
+    return jnp.concatenate([base_mask & ~shadowed, ring_validity(cache)],
+                           axis=1)
 
 
 def overlay_kv(cache: Cache, layer_k: jnp.ndarray, layer_v: jnp.ndarray,

@@ -35,6 +35,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import cost_analysis_dict, use_abstract_mesh
 from ..configs.base import ModelConfig, ShapeSpec
 from . import cells as C
 
@@ -81,7 +82,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
 
 
 def compiled_metrics(compiled) -> Dict[str, float]:
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -107,7 +108,7 @@ def _lower_metrics(cfg, shape, mesh, *, microbatches=None, dispatch_mode="staged
         dispatch_mode=dispatch_mode,
     )
     args = tuple(a for a in args if a is not None)
-    with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+    with mesh, use_abstract_mesh(mesh.abstract_mesh):
         compiled = jax.jit(step).lower(*args).compile()
     return compiled_metrics(compiled)
 

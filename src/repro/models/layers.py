@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..compat import get_abstract_mesh
 from ..configs.base import GELU, LAYERNORM, RMSNORM, SQUARED_RELU, SWIGLU, ModelConfig
 
 # ---------------------------------------------------------------------------
@@ -167,7 +168,7 @@ def _tp_head_pad(h: int) -> int:
     outputs are sliced off, so the math is exact). Costs h_pad/h extra
     attention FLOPs; buys head-sharded score tensors.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return 0
     m = mesh.shape["model"]
@@ -450,7 +451,7 @@ def shard_batch(x: jnp.ndarray) -> jnp.ndarray:
     rematerialization (replicating [B, S, D] per layer). One constraint at
     the residual stream's source pins the whole scan to batch sharding.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -499,7 +500,7 @@ def lm_logits(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
     w = p["tok"] if cfg.tie_embeddings else p["head"]
     v = w.shape[0]
     vp = 0
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is not None and "model" in mesh.axis_names:
         m = mesh.shape["model"]
         if v % m:

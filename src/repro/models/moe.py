@@ -32,6 +32,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import get_abstract_mesh
 from ..configs.base import ModelConfig
 from . import layers as L
 
@@ -43,7 +44,7 @@ DISPATCH_MODES = ("direct", "staged", "adaptive")
 def _constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
     """with_sharding_constraint that no-ops outside a mesh context and
     drops axes that don't divide the corresponding dim."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     fixed = []
@@ -60,7 +61,7 @@ def _constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
 def buf_constraint(buf: jnp.ndarray, n_experts: int) -> jnp.ndarray:
     """Expert-buffer sharding: EP over "model" when E divides it, else the
     capacity dim over "data" (keeps dispatch scatters shard-local-ish)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return buf
     if "model" in mesh.axis_names and n_experts % mesh.shape["model"] == 0:
@@ -281,7 +282,7 @@ def moe_ffn_layer(
     # dispatch buffers shard EP-style instead of replicating. Padded experts
     # never receive assignments (router logits only span the real E).
     n_experts = cfg.n_experts
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is not None and "model" in mesh.axis_names:
         m = mesh.shape["model"]
         if n_experts % m:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ModelConfig
+from ..kvcache import staged as ST
 from . import layers as L
 from .scan import get_scan
 
@@ -434,26 +435,14 @@ class DecoderLM:
                 "VLM decode uses the direct path (DESIGN.md §Arch-applicability)"
             )
         if has_ring:
-            r = cache["ring_k"].shape[2]
-            cur = cache["ring_fill"]
             if unload_mask is None:
                 unload_mask = jnp.ones((b,), jnp.bool_)
-            # overlay mask [B, S+R], shared by all layers:
-            ring_valid = (jnp.arange(r)[None, :] < cur) & (cache["ring_slot"] >= 0)
-            ring_valid = ring_valid | (
-                (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
+            # unified-ring overlay bookkeeping: attention mask over
+            # cache ∪ ring, direct-subset slots (sentinel drops staged
+            # sequences), and the ring column this step appends to
+            full_mask, direct_slots, cur = ST.overlay_step(
+                cache, vmask, slots, unload_mask
             )
-            slot_now = jnp.where(unload_mask, slots, clen)
-            shadow_src = jnp.where(
-                (jnp.arange(r)[None, :] < cur) & (cache["ring_slot"] >= 0),
-                cache["ring_slot"], clen,
-            )  # [B, R] pending slots (clen = none)
-            shadowed = jnp.zeros((b, clen + 1), jnp.bool_)
-            shadowed = shadowed.at[jnp.arange(b)[:, None], shadow_src].set(True)
-            shadowed = shadowed.at[jnp.arange(b), slot_now].set(True)[:, :clen]
-            full_mask = jnp.concatenate([vmask & ~shadowed, ring_valid], axis=1)
-            # direct subset writes main cache; staged subset drops (slot=clen)
-            direct_slots = jnp.where(unload_mask, clen, slots)
         else:
             full_mask = vmask
             direct_slots = slots
@@ -468,8 +457,8 @@ class DecoderLM:
             k_new, v_new = L.project_kv(cfg, p["attn"], hn, pos[:, None])
             if has_ring:
                 kc, vc = kv_writer(kc, vc, k_new, v_new, direct_slots)
-                rk = lax.dynamic_update_slice(rk, k_new, (0, cur, 0, 0))
-                rv = lax.dynamic_update_slice(rv, v_new, (0, cur, 0, 0))
+                rk = ST.stage_tile(rk, k_new, cur)
+                rv = ST.stage_tile(rv, v_new, cur)
                 ak = jnp.concatenate([kc, rk], axis=1)
                 av = jnp.concatenate([vc, rv], axis=1)
                 a = L.decode_attention(cfg, p["attn"], hn, pos, ak, av, full_mask)
@@ -488,12 +477,10 @@ class DecoderLM:
                 (params["blocks"], cache["k"], cache["v"],
                  cache["ring_k"], cache["ring_v"]),
             )
-            new_cache = dict(cache, k=ks, v=vs, ring_k=rks, ring_v=rvs)
-            new_cache["ring_slot"] = lax.dynamic_update_slice(
-                cache["ring_slot"],
-                jnp.where(unload_mask, slots, -1)[:, None], (0, cur),
+            new_cache = ST.ring_commit(
+                dict(cache, k=ks, v=vs, ring_k=rks, ring_v=rvs),
+                slots, unload_mask,
             )
-            new_cache["ring_fill"] = cur + 1
         elif not self.is_vlm:
             x, (ks, vs) = self._scan(self_body, x, (params["blocks"], cache["k"], cache["v"]))
             new_cache = dict(cache, k=ks, v=vs)

@@ -1,13 +1,30 @@
-"""Serving engine: batched prefill + decode with uRDMA KV-write routing.
+"""Serving engine: batched prefill + fully device-resident decode with
+uRDMA KV-write routing.
 
 Write modes (per paper §3):
   direct    every KV write scatters straight into the cache (offload path)
   staged    every write appends to the staging ring; bulk drain when full
+            or when a destination conflicts with a pending entry
             (unload path)
   adaptive  the decision module routes per sequence: sequences whose
             destination pages are HOT (frequency counters over page ids)
             write direct; cold ones are staged. Counters update per step —
             the paper's frequency policy on KV pages.
+
+Routing goes through ``core.decision.DecisionModule`` — the same
+monitor/policy composition the ``RemoteWriteEngine`` uses — so the serving
+layer has no private path-selection logic (paper Idea 3: one decision
+plane for every write surface).
+
+The decode loop is ONE ``lax.scan`` under ``jax.jit``: cache, staging
+ring, monitor state, PRNG key, and int32 telemetry counters all live in a
+fixed-shape carry; drains are ``lax.cond`` branches (full OR
+conflict-forced); per-step routing statistics accumulate on device and are
+read back ONCE per call. The paper's requirement that the decision run
+"faster than the expected savings" is unmeetable if every step pays a
+host round-trip — the seed's Python loop did exactly that
+(``int(jnp.sum(unload))`` per step). That loop survives as
+``decode_reference`` (parity oracle + benchmark baseline).
 
 The engine is model-agnostic (any family exposing prefill/decode_step);
 staged/adaptive need ring-overlay support (dense DecoderLM family).
@@ -15,12 +32,16 @@ staged/adaptive need ring-overlay support (dense DecoderLM family).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from ..core.decision import DecisionModule
 from ..core.monitor import ExactMonitor
+from ..core.policy import AlwaysOffload, AlwaysUnload, FrequencyPolicy
+from ..core.types import make_write_batch
 from ..kvcache import add_ring, drain_ring, maybe_drain, strip_ring
 
 WRITE_MODES = ("direct", "staged", "adaptive")
@@ -34,6 +55,7 @@ class ServeConfig:
     page_size: int = 64          # page granularity for hotness accounting
     hot_threshold: int = 4       # counts above -> page considered hot
     greedy: bool = True
+    drain_kernel: bool = False   # drain via the Pallas staged_scatter kernel
 
 
 class ServeEngine:
@@ -44,8 +66,19 @@ class ServeEngine:
         self.cfg = cfg
         n_pages = max(1, cfg.max_seq // cfg.page_size)
         self.page_monitor = ExactMonitor(n_regions=n_pages)
-        self.mon_state = self.page_monitor.init()
+        policy = {
+            "direct": AlwaysOffload(),
+            "staged": AlwaysUnload(),
+            "adaptive": FrequencyPolicy(
+                monitor=self.page_monitor, threshold=cfg.hot_threshold
+            ),
+        }[cfg.write_mode]
+        # one decision plane for every mode: the trivial policies make
+        # direct/staged a degenerate routing, not a separate code path
+        self.decision = DecisionModule(policy=policy, monitor=self.page_monitor)
+        self.mon_state = self.decision.init_state()
         self.stats = {"direct_writes": 0, "staged_writes": 0, "drains": 0}
+        self._decode_fns: Dict[Tuple, Callable] = {}
 
     # ------------------------------------------------------------------
     def prefill(self, tokens: jnp.ndarray, media=None) -> Tuple[jnp.ndarray, Any]:
@@ -62,16 +95,71 @@ class ServeEngine:
         return logits, cache
 
     # ------------------------------------------------------------------
-    def _unload_mask(self, slots: jnp.ndarray) -> Optional[jnp.ndarray]:
-        mode = self.cfg.write_mode
-        if mode == "direct":
-            return None
-        if mode == "staged":
-            return jnp.ones_like(slots, jnp.bool_)
-        # adaptive: cold destination pages -> unload
-        pages = slots // self.cfg.page_size
-        counts = self.page_monitor.query(self.mon_state, pages)
-        return counts < self.cfg.hot_threshold
+    def _step_slots(self, pos: jnp.ndarray) -> jnp.ndarray:
+        return jnp.minimum(pos, self.cfg.max_seq - 1)
+
+    def _decode_fn(self, n_steps: int, greedy: bool) -> Callable:
+        """Jitted whole-loop decode, cached per (n_steps, sampling mode)."""
+        key = (n_steps, greedy)
+        fn = self._decode_fns.get(key)
+        if fn is not None:
+            return fn
+
+        cfg = self.cfg
+        ring = cfg.write_mode != "direct"
+
+        def run(params, cache, first_tokens, start_pos, mon_state, sample_key):
+            b = first_tokens.shape[0]
+
+            def step(carry, t):
+                cache, tokens, mon, skey, stats = carry
+                pos = start_pos + t
+                slots = self._step_slots(pos)
+                # route this step's KV writes: monitor update + policy
+                # compare, fully on device (core.decision hot path)
+                batch = make_write_batch(slots // cfg.page_size)
+                unload, mon, _ = self.decision(mon, batch)
+                n_u = jnp.sum(unload.astype(jnp.int32))
+                if ring:
+                    # drain BEFORE the append when the ring is out of room
+                    # or this step's destinations collide with pending
+                    # entries (keeps drain batches unique-destination —
+                    # the staged_scatter precondition)
+                    cache, drained = maybe_drain(
+                        cache, use_kernel=cfg.drain_kernel,
+                        incoming_slots=slots,
+                    )
+                    logits, cache = self.model.decode_step(
+                        params, cache, tokens, pos, unload_mask=unload
+                    )
+                else:
+                    drained = jnp.zeros((), jnp.bool_)
+                    logits, cache = self.model.decode_step(
+                        params, cache, tokens, pos
+                    )
+                if greedy:
+                    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                else:
+                    skey, sub = jax.random.split(skey)
+                    tokens = jax.random.categorical(sub, logits).astype(jnp.int32)
+                stats = stats + jnp.stack(
+                    [b - n_u, n_u, drained.astype(jnp.int32)]
+                )
+                return (cache, tokens, mon, skey, stats), tokens
+
+            stats0 = jnp.zeros((3,), jnp.int32)
+            (cache, _, mon, _, stats), toks = lax.scan(
+                step,
+                (cache, first_tokens, mon_state, sample_key, stats0),
+                jnp.arange(n_steps, dtype=jnp.int32),
+            )
+            if ring:
+                cache = drain_ring(cache, use_kernel=cfg.drain_kernel)
+            return jnp.moveaxis(toks, 0, 1), cache, mon, stats
+
+        fn = jax.jit(run)
+        self._decode_fns[key] = fn
+        return fn
 
     def decode(
         self,
@@ -81,34 +169,65 @@ class ServeEngine:
         n_steps: int,
         sample_key: Optional[jax.Array] = None,
     ) -> Tuple[jnp.ndarray, Any]:
-        """Greedy (or sampled) decode loop. Returns (tokens [B, n], cache)."""
+        """Greedy (or sampled) decode loop. Returns (tokens [B, n], cache).
+
+        The full loop — model steps, ring drains, routing decisions,
+        telemetry — runs as one compiled ``lax.scan``; the only host
+        transfer is the final (tokens, stats) readback.
+        """
+        greedy = self.cfg.greedy or sample_key is None
+        if sample_key is None:
+            sample_key = jax.random.key(0)  # unused on the greedy path
+        fn = self._decode_fn(int(n_steps), greedy)
+        toks, cache, self.mon_state, stats = fn(
+            self.params, cache, first_tokens, start_pos, self.mon_state,
+            sample_key,
+        )
+        d, s, n_drains = (int(x) for x in stats)  # ONE readback per call
+        self.stats["direct_writes"] += d
+        self.stats["staged_writes"] += s
+        self.stats["drains"] += n_drains
+        return toks, cache
+
+    # ------------------------------------------------------------------
+    def decode_reference(
+        self,
+        cache: Any,
+        first_tokens: jnp.ndarray,
+        start_pos: jnp.ndarray,
+        n_steps: int,
+        sample_key: Optional[jax.Array] = None,
+    ) -> Tuple[jnp.ndarray, Any]:
+        """The seed's per-step Python loop: one ``decode_step`` dispatch and
+        a host telemetry round-trip per token. Kept as the parity oracle
+        for :meth:`decode` and the benchmark baseline
+        (``benchmarks/serve_modes.py`` reports both)."""
         b = first_tokens.shape[0]
         tokens = first_tokens
         out = []
+        ring = self.cfg.write_mode != "direct"
         for t in range(n_steps):
             pos = start_pos + t
-            slots = jnp.minimum(pos, self.cfg.max_seq - 1)
-            unload = self._unload_mask(slots)
-            kw = {}
-            if self.cfg.write_mode != "direct":
-                kw["unload_mask"] = unload
-            logits, cache = self.model.decode_step(
-                self.params, cache, tokens, pos, **kw
-            )
-            # monitor update: destination pages written this step
-            pages = slots // self.cfg.page_size
-            self.mon_state = self.page_monitor.update(self.mon_state, pages)
-            if unload is not None:
-                n_u = int(jnp.sum(unload))
+            slots = self._step_slots(pos)
+            batch = make_write_batch(slots // self.cfg.page_size)
+            unload, self.mon_state, _ = self.decision(self.mon_state, batch)
+            if ring:
+                cache, drained = maybe_drain(
+                    cache, use_kernel=self.cfg.drain_kernel,
+                    incoming_slots=slots,
+                )
+                self.stats["drains"] += int(drained)        # host sync
+                n_u = int(jnp.sum(unload))                  # host sync
                 self.stats["staged_writes"] += n_u
                 self.stats["direct_writes"] += b - n_u
-                before = int(cache["ring_fill"])
-                cache = maybe_drain(cache)
-                if int(cache["ring_fill"]) < before:
-                    self.stats["drains"] += 1
+                logits, cache = self.model.decode_step(
+                    self.params, cache, tokens, pos, unload_mask=unload
+                )
             else:
                 self.stats["direct_writes"] += b
-
+                logits, cache = self.model.decode_step(
+                    self.params, cache, tokens, pos
+                )
             if self.cfg.greedy or sample_key is None:
                 tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
@@ -116,20 +235,24 @@ class ServeEngine:
                 tokens = jax.random.categorical(sub, logits).astype(jnp.int32)
             out.append(tokens)
 
-        if self.cfg.write_mode != "direct":
-            cache = drain_ring(cache, use_kernel=False)
-        return jnp.stack(out, axis=1), cache
+        if ring:
+            cache = drain_ring(cache, use_kernel=self.cfg.drain_kernel)
+        if out:
+            return jnp.stack(out, axis=1), cache
+        return jnp.zeros((b, 0), jnp.int32), cache
 
     # ------------------------------------------------------------------
     def generate(
         self, prompt: jnp.ndarray, n_steps: int, media=None,
         sample_key: Optional[jax.Array] = None,
+        reference: bool = False,
     ) -> jnp.ndarray:
         """Convenience: prefill + decode. prompt [B, S] -> tokens [B, n]."""
         logits, cache = self.prefill(prompt, media)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         start = jnp.full((prompt.shape[0],), prompt.shape[1], jnp.int32)
-        toks, cache = self.decode(cache, first, start, n_steps - 1, sample_key)
+        step = self.decode_reference if reference else self.decode
+        toks, cache = step(cache, first, start, n_steps - 1, sample_key)
         if self.cfg.write_mode != "direct":
             cache = strip_ring(cache)
         return jnp.concatenate([first[:, None], toks], axis=1)

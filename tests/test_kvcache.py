@@ -39,7 +39,7 @@ def test_staged_ring_decode_equals_direct(arch):
     for t in range(STEPS):
         lg_s, cs = m.decode_step(params, cs, tokens[:, S + t],
                                  jnp.full((B,), S + t, jnp.int32))
-        cs = maybe_drain(cs)
+        cs, _ = maybe_drain(cs)
 
     np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_d),
                                atol=1e-4, rtol=1e-4)
@@ -62,7 +62,7 @@ def test_adaptive_mixed_paths_match_direct():
         lg, cs = m.decode_step(params, cs, tokens[:, S + t],
                                jnp.full((B,), S + t, jnp.int32),
                                unload_mask=mask)
-        cs = maybe_drain(cs)
+        cs, _ = maybe_drain(cs)
     np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S + STEPS - 1]),
                                atol=1e-4, rtol=1e-4)
 

@@ -89,6 +89,65 @@ def test_hysteresis_policy_prefers_offload_between_bands():
     assert not bool(un[0])  # between lo/hi -> safe default = offload
 
 
+def test_hysteresis_carries_last_decision_through_midband():
+    """The documented behaviour: unload below lo, offload at/above hi, and
+    IN BETWEEN keep the region's last decision (both directions)."""
+    mon = ExactMonitor(n_regions=8)
+    pol = HysteresisPolicy(monitor=mon, lo=2, hi=6)
+    st = pol.init_state()
+    # count 1 (< lo): unload, and the decision is remembered
+    un, st = pol.route(st, _batch([3]))
+    assert un.tolist() == [True]
+    # counts 2..5 (mid-band): stays UNLOADED — no flapping at lo
+    for expect_count in (2, 3, 4, 5):
+        un, st = pol.route(st, _batch([3]))
+        assert int(mon.query(st.mon, jnp.asarray([3]))[0]) == expect_count
+        assert un.tolist() == [True], expect_count
+    # count 6 (>= hi): flips to offload
+    un, st = pol.route(st, _batch([3]))
+    assert un.tolist() == [False]
+    # back in the mid-band on a LATER batch: stays OFFLOADED now
+    un, st = pol.route(st, _batch([3]))
+    assert un.tolist() == [False]
+
+
+def test_hysteresis_buckets_regions_beyond_table():
+    """Region ids >= n_regions (CMS universes) must keep hysteresis via
+    deterministic modulo bucketing — not silently drop the memory write."""
+    from repro.core.monitor import CMSMonitor
+
+    pol = HysteresisPolicy(monitor=CMSMonitor(depth=2, log2_width=6),
+                           lo=2, hi=5, n_regions=8)
+    st = pol.init_state()
+    un, st = pol.route(st, _batch([100]))   # count 1 < lo -> unload
+    assert un.tolist() == [True]
+    assert bool(st.last_unload[100 % 8])    # memory actually recorded
+    for _ in range(3):                      # counts 2..4: mid-band
+        un, st = pol.route(st, _batch([100]))
+        assert un.tolist() == [True]        # keeps the last decision
+    un, st = pol.route(st, _batch([100]))   # count 5 >= hi -> offload
+    assert un.tolist() == [False]
+
+
+def test_hysteresis_under_decision_module_and_jit():
+    import jax
+
+    mon = ExactMonitor(n_regions=4)
+    dm = DecisionModule(policy=HysteresisPolicy(monitor=mon, lo=2, hi=6))
+    st = dm.init_state()
+
+    @jax.jit
+    def step(state, batch):
+        return dm(state, batch)
+
+    un, st, stats = step(st, _batch([0, 1]))
+    assert un.tolist() == [True, True]  # fresh regions: count 1 < lo
+    assert int(stats.n_unloaded) == 2
+    for _ in range(4):  # push region 0 to count >= hi
+        un, st, _ = step(st, _batch([0, 0]))
+    assert not bool(un[0])
+
+
 def test_top_k_hot_table():
     counts = jnp.asarray([5, 1, 9, 3], jnp.int32)
     hot = top_k_hot_table(counts, 2)

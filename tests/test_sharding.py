@@ -4,19 +4,20 @@ attention schemes must match the divisibility table in DESIGN.md."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config, get_shape
 from repro.distributed.sharding import (
     attention_scheme,
     cache_pspec,
+    make_abstract_mesh,
     param_pspec,
     tree_paths_and_leaves,
 )
 from repro.models import abstract_params, build_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, spec_entry):

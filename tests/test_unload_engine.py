@@ -169,6 +169,112 @@ def test_engine_telemetry_counts():
     assert int(st.n_offloaded) == 0
 
 
+# ---------------------------------------------------------------------------
+# path parity (PROPERTY): unload path == write_direct oracle, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def _py_oracle(shape, writes):
+    """Sequential last-write-wins reference, skipping invalid writes."""
+    ref = np.zeros(shape, np.float32)
+    for region, offset, size, ok, payload in writes:
+        if ok:
+            ref[region, offset:offset + size] = payload[:size]
+    return ref
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_unload_path_bit_identical_to_direct_oracle(seed):
+    """PROPERTY (DESIGN.md §1.3): ``write`` + ``flush`` under AlwaysUnload
+    is BIT-identical to the ``write_direct`` oracle, exercising ring-wrap
+    (capacity 8 << total writes), conflict-forced drains (destinations
+    repeat across batches), partial sizes, sub-region offsets, and uMTT
+    rejections (bad stags and unregistered regions never land).
+
+    Destinations are unique (region, offset) pairs WITHIN a batch and
+    lane-disjoint across offsets — the only intra-batch overlap the engine
+    contracts to order (``_last_wins`` suppresses exact duplicate keys;
+    overlapping-but-unequal destinations are the caller's race, as in RDMA).
+    """
+    R, W = 16, 8
+    table = U.make_umtt(8)
+    table = U.register(table, base=0, n_regions=12, stag=7)  # 12..15 invalid
+    eng = _engine(AlwaysUnload(), ring=8, width=W)
+    state = eng.init_state(table)
+    mem = jnp.zeros((R, W))
+    rng = np.random.RandomState(seed)
+    writes = []
+    n = 6
+    for _ in range(10):
+        # unique destination keys this batch; lanes [0, 4) vs [4, 8) disjoint
+        pairs = rng.permutation(R * 2)[:n]
+        regions = (pairs // 2).astype(np.int32)
+        offsets = ((pairs % 2) * 4).astype(np.int32)
+        sizes = rng.randint(1, 5, size=n).astype(np.int32)
+        stags = np.where(rng.rand(n) < 0.8, 7, 99).astype(np.int32)
+        payload = rng.randn(n, W).astype(np.float32)
+        batch = make_write_batch(jnp.asarray(regions),
+                                 offset=jnp.asarray(offsets),
+                                 size=jnp.asarray(sizes))
+        state, mem = eng.write(state, mem, batch, jnp.asarray(payload),
+                               jnp.asarray(stags))
+        for i in range(n):
+            ok = regions[i] < 12 and stags[i] == 7
+            writes.append((regions[i], offsets[i], sizes[i], ok, payload[i]))
+    state, mem = eng.flush(state, mem)
+    ref = _py_oracle((R, W), writes)
+    np.testing.assert_array_equal(np.asarray(mem), ref)
+    assert int(state.n_rejected) == sum(1 for w in writes if not w[3])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_adaptive_mix_bit_identical_to_direct_oracle(seed):
+    """Same property under a path MIX (FrequencyPolicy): callers can never
+    observe which path a write took."""
+    R, W = 16, 4
+    table = _full_table(R)
+    mon = ExactMonitor(n_regions=R)
+    eng = _engine(FrequencyPolicy(monitor=mon, threshold=4), mon,
+                  ring=8, width=W)
+    state = eng.init_state(table)
+    mem = jnp.zeros((R, W))
+    rng = np.random.RandomState(seed)
+    writes = []
+    for _ in range(10):
+        # skew toward low regions (hot under the frequency policy) while
+        # keeping destination keys unique within the batch
+        regions = rng.permutation(np.concatenate(
+            [np.arange(4), 4 + rng.permutation(R - 4)[:4]]
+        ))[:5].astype(np.int32)
+        sizes = rng.randint(1, W + 1, size=5).astype(np.int32)
+        payload = rng.randn(5, W).astype(np.float32)
+        batch = make_write_batch(jnp.asarray(regions),
+                                 size=jnp.asarray(sizes))
+        state, mem = eng.write(state, mem, batch, jnp.asarray(payload),
+                               jnp.full((5,), 7, jnp.int32))
+        for i in range(5):
+            writes.append((regions[i], 0, sizes[i], True, payload[i]))
+    state, mem = eng.flush(state, mem)
+    np.testing.assert_array_equal(np.asarray(mem), _py_oracle((R, W), writes))
+
+
+def test_scatter_rows_kernel_interpret_matches_jnp_drain():
+    """The staged_scatter Pallas kernel (interpret mode) and the jnp drain
+    are the same function — through the unified ``ring.scatter_rows``
+    dispatcher, the single place the kernel is invoked from."""
+    from repro.core import ring as R
+
+    rng = np.random.RandomState(0)
+    dest = jnp.asarray(rng.randn(32, 256), jnp.float32)
+    staging = jnp.asarray(rng.randn(8, 256), jnp.float32)
+    rows = jnp.asarray(rng.permutation(32)[:8], jnp.int32)
+    valid = jnp.asarray([True, True, False, True, False, True, True, False])
+    a = R.scatter_rows(dest, staging, rows, valid,
+                       use_kernel=True, interpret=True)
+    b = R.scatter_rows(dest, staging, rows, valid, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_partial_write_sizes():
     """Writes smaller than the region width only touch their bytes."""
     table = _full_table(4)
