@@ -1,25 +1,38 @@
-"""Serving write-mode comparison: direct vs staged vs adaptive KV writes
-through the real serve engine (reduced model, CPU wall time per decode
-step + path statistics). The framework-level analogue of Fig. 3.
+"""Serving write-mode + scheduler comparison through the real engines.
 
-Each mode is measured twice:
-  *_ms_per_step       the device-resident decode (ONE jitted lax.scan —
-                      drains, routing, telemetry all on device)
-  *_ref_ms_per_step   the seed's per-step Python loop (one dispatch + host
-                      telemetry round-trips per token), kept as
-                      ``ServeEngine.decode_reference``
-and the speedup is reported as ``*_scan_speedup``.
+Two benchmark families:
+
+* write modes (the framework-level analogue of Fig. 3): direct vs staged
+  vs adaptive KV writes through ``ServeEngine``, each measured as the
+  device-resident scan (``*_ms_per_step``) and the seed's per-step Python
+  loop (``*_ref_ms_per_step``), speedup = ``*_scan_speedup``.
+* continuous batching (``--batched`` / always part of ``run()``): the
+  slot-scheduler (``BatchedServeEngine``, batch 8 over the paged pool)
+  vs SEQUENTIAL per-request decode (the same scheduler pinned to one
+  slot), same request stream. Reports tok/s for both, the speedup, and
+  whether the outputs are bit-identical (they must be: batching is a
+  throughput optimization, not a sampling change).
+
+CLI:  PYTHONPATH=src python benchmarks/serve_modes.py --batched \
+          [--json out.json] [--slots 8] [--requests 16]
+prints one JSON document (stable keys — CI uploads it as the perf
+trajectory artifact).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.data import synthetic_requests
 from repro.models import build_model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import BatchConfig, BatchedServeEngine, ServeConfig, ServeEngine
 
 
 def _time_generate(eng, prompt, n, reference):
@@ -29,6 +42,61 @@ def _time_generate(eng, prompt, n, reference):
     toks = eng.generate(prompt, n, reference=reference)
     jax.block_until_ready(toks)
     return (time.perf_counter() - t0) / n * 1e3
+
+
+def _serve_timed(eng, mk_queue):
+    """(outputs, tok/s) on a warm engine: one compile pass, one timed pass."""
+    eng.serve(mk_queue())
+    eng.reset()
+    queue = mk_queue()
+    t0 = time.perf_counter()
+    outputs = eng.serve(queue)
+    dt = time.perf_counter() - t0
+    n_toks = sum(len(t) for t in outputs.values())
+    return outputs, n_toks / dt
+
+
+def bench_batched(
+    arch: str = "stablelm-1.6b",
+    n_slots: int = 8,
+    n_requests: int = 16,
+    prompt_len: int = 16,
+    max_new: int = 49,
+    write_mode: str = "direct",
+    segment_len: int = 16,
+) -> dict:
+    """Continuous batching vs sequential per-request decode (same model,
+    same requests, same paged substrate — only the slot count differs)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    max_seq = prompt_len + max_new + 8
+    params = model.init(jax.random.key(0), max_seq)
+    mk_queue = lambda: synthetic_requests(  # noqa: E731
+        n_requests, prompt_len, cfg.vocab, max_new, seed=11)
+
+    def mk_engine(slots):
+        return BatchedServeEngine(model, params, BatchConfig(
+            max_seq=max_seq, n_slots=slots, segment_len=segment_len,
+            write_mode=write_mode, page_size=8,
+        ))
+
+    out_b, tps_b = _serve_timed(mk_engine(n_slots), mk_queue)
+    out_s, tps_s = _serve_timed(mk_engine(1), mk_queue)
+    identical = (
+        set(out_b) == set(out_s)
+        and all(np.array_equal(out_b[r], out_s[r]) for r in out_b)
+    )
+    return {
+        "arch": arch,
+        "write_mode": write_mode,
+        "n_slots": n_slots,
+        "n_requests": n_requests,
+        "tokens_per_request": max_new,
+        "batched_tok_s": round(tps_b, 2),
+        "sequential_tok_s": round(tps_s, 2),
+        "batched_speedup": round(tps_b / tps_s, 3),
+        "bit_identical": bool(identical),
+    }
 
 
 def run() -> list:
@@ -55,4 +123,48 @@ def run() -> list:
         dt_ref = _time_generate(fresh(), prompt, 24, reference=True)
         rows.append((f"serve/{mode}_ref_ms_per_step", dt_ref, "ms"))
         rows.append((f"serve/{mode}_scan_speedup", dt_ref / dt, "x"))
+
+    # continuous batching (smaller stream than the CLI default: the suite
+    # runner favors breadth over statistics)
+    b = bench_batched(n_slots=4, n_requests=6, max_new=17, segment_len=8)
+    rows.append(("serve/batched_tok_s", b["batched_tok_s"], "tok/s"))
+    rows.append(("serve/sequential_tok_s", b["sequential_tok_s"], "tok/s"))
+    rows.append(("serve/batched_speedup", b["batched_speedup"], "x"))
+    rows.append(("serve/batched_bit_identical", float(b["bit_identical"]), "bool"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batched", action="store_true",
+                    help="run the continuous-batching throughput comparison")
+    ap.add_argument("--json", default=None, help="write the JSON report here")
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=49)
+    ap.add_argument("--write-mode", default="direct",
+                    choices=("direct", "staged", "adaptive"))
+    args = ap.parse_args()
+
+    if args.batched:
+        report = bench_batched(
+            arch=args.arch, n_slots=args.slots, n_requests=args.requests,
+            prompt_len=args.prompt_len, max_new=args.max_new,
+            write_mode=args.write_mode,
+        )
+    else:
+        report = {name: {"value": val, "unit": unit}
+                  for name, val, unit in run()}
+    doc = json.dumps(report, indent=2)
+    print(doc)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(doc + "\n")
+    if args.batched and report["batched_speedup"] < 1.0:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

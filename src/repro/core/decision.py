@@ -49,16 +49,24 @@ class DecisionModule:
         return None
 
     def __call__(
-        self, state, batch: WriteBatch
+        self, state, batch: WriteBatch, active: Optional[jnp.ndarray] = None
     ) -> Tuple[jnp.ndarray, object, DecisionStats]:
-        """-> (unload_mask bool[n], new routing state, stats)."""
+        """-> (unload_mask bool[n], new routing state, stats).
+
+        ``active`` (bool[n], optional) marks live requests in a fixed-shape
+        batch (the serve scheduler's slot array): inactive entries never
+        update the monitor, never unload, and are excluded from the stats —
+        a retired slot's stale region id must not heat a page it no longer
+        owns."""
         if hasattr(self.policy, "route"):
-            unload, state = self.policy.route(state, batch)
-            return unload, state, DecisionStats.from_mask(unload)
+            unload, state = self.policy.route(state, batch, mask=active)
+            return unload, state, DecisionStats.from_mask(unload, active)
         if self.monitor is not None:
-            state = self.monitor.update(state, batch.region)
+            state = self.monitor.update(state, batch.region, mask=active)
         unload = self.policy.decide(state, batch)
-        return unload, state, DecisionStats.from_mask(unload)
+        if active is not None:
+            unload = unload & active
+        return unload, state, DecisionStats.from_mask(unload, active)
 
 
 def expert_hot_mask(expert_load: jnp.ndarray, offload_top_k: int) -> jnp.ndarray:

@@ -58,9 +58,21 @@ class ExactMonitor:
             total=jnp.zeros((), jnp.int32),
         )
 
-    def update(self, state: MonitorState, region_ids: jnp.ndarray) -> MonitorState:
-        counts = state.counts.at[region_ids].add(1)
-        total = state.total + region_ids.shape[0]
+    def update(
+        self,
+        state: MonitorState,
+        region_ids: jnp.ndarray,
+        mask: jnp.ndarray = None,
+    ) -> MonitorState:
+        """``mask`` (bool[n], optional) drops masked ids from the counters —
+        the serve scheduler uses it so retired/empty slots never pollute
+        page frequencies (their region ids are stale)."""
+        delta = 1 if mask is None else mask.astype(jnp.int32)
+        counts = state.counts.at[region_ids].add(delta)
+        total = state.total + (
+            region_ids.shape[0] if mask is None
+            else jnp.sum(mask.astype(jnp.int32))
+        )
         if self.decay_every:
             do_decay = (total % self.decay_every) < (state.total % self.decay_every)
             counts = jnp.where(do_decay, counts // 2, counts)
@@ -92,11 +104,20 @@ class CMSMonitor:
             total=jnp.zeros((), jnp.int32),
         )
 
-    def update(self, state: MonitorState, region_ids: jnp.ndarray) -> MonitorState:
+    def update(
+        self,
+        state: MonitorState,
+        region_ids: jnp.ndarray,
+        mask: jnp.ndarray = None,
+    ) -> MonitorState:
+        delta = 1 if mask is None else mask.astype(jnp.int32)
         counts = state.counts
         for r in range(self.depth):
-            counts = counts.at[r, _cms_hash(region_ids, r, self.log2_width)].add(1)
-        total = state.total + region_ids.shape[0]
+            counts = counts.at[r, _cms_hash(region_ids, r, self.log2_width)].add(delta)
+        total = state.total + (
+            region_ids.shape[0] if mask is None
+            else jnp.sum(mask.astype(jnp.int32))
+        )
         if self.decay_every:
             do_decay = (total % self.decay_every) < (state.total % self.decay_every)
             counts = jnp.where(do_decay, counts // 2, counts)

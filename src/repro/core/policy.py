@@ -164,8 +164,9 @@ class HysteresisPolicy:
         return jnp.where(est < self.lo, True,
                          jnp.where(est >= self.hi, False, prev))
 
-    def route(self, state: HysteresisState,
-              batch: WriteBatch) -> Tuple[jnp.ndarray, HysteresisState]:
+    def route(self, state: HysteresisState, batch: WriteBatch,
+              mask: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, HysteresisState]:
         """Stateful hot path: update counters, apply the lo/hi bands with
         the carried per-region decision, record the new decisions.
 
@@ -174,14 +175,29 @@ class HysteresisPolicy:
         hotness memory — and since duplicates of a region within a batch
         share (est, prev), the recorded value is identical per region
         (deterministic scatter regardless of XLA duplicate-index order).
+
+        ``mask`` (bool[n], optional): masked requests (inactive serve
+        slots) update neither the counters nor the decision memory and
+        never unload.
         """
-        mon = self.monitor.update(state.mon, batch.region)
+        mon = self.monitor.update(state.mon, batch.region, mask=mask)
         est = self.monitor.query(mon, batch.region)
-        bucket = batch.region % state.last_unload.shape[0]
+        n = state.last_unload.shape[0]
+        bucket = batch.region % n
         prev = state.last_unload[bucket]
         band = self._band(est, prev)
-        last = state.last_unload.at[bucket].set(band)
+        if mask is None:
+            last = state.last_unload.at[bucket].set(band)
+        else:
+            # masked lanes write NOTHING (out-of-range sentinel drops the
+            # scatter) — active duplicates of a region still share
+            # (est, prev) and write one identical band value, so the
+            # determinism guarantee above survives masking
+            last = state.last_unload.at[jnp.where(mask, bucket, n)].set(
+                band, mode="drop")
         unload = band & (batch.size <= self.max_unload_size)
+        if mask is not None:
+            unload = unload & mask
         return unload, HysteresisState(mon, last)
 
     def decide(self, state, batch: WriteBatch) -> jnp.ndarray:

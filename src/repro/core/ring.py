@@ -71,6 +71,18 @@ def capacity(state: RingState) -> int:
     return state.live.shape[-1]
 
 
+def dense_state(meta: jnp.ndarray, fill: jnp.ndarray) -> RingState:
+    """Dense-mode bookkeeping view from an instantiation's metadata plane:
+    ``meta`` [lanes, cap] per-entry destination keys (-1 = lane not staged
+    at that column), ``fill`` the scalar append cursor. THE one way both KV
+    overlays (``kvcache.staged`` on main-cache slots, ``kvcache.paged`` on
+    logical rows) derive their RingState — the occupancy rule ("columns
+    [0, fill) where a destination was recorded") exists only here."""
+    cap = meta.shape[1]
+    filled = jnp.arange(cap)[None, :] < fill
+    return RingState(live=filled & (meta >= 0), head=fill)
+
+
 # ---------------------------------------------------------------------------
 # occupancy / overflow accounting
 # ---------------------------------------------------------------------------
@@ -155,6 +167,42 @@ def push_column(buf: jnp.ndarray, head: jnp.ndarray, column: jnp.ndarray,
     starts[axis] = head
     return lax.dynamic_update_slice(buf, jnp.expand_dims(column, axis),
                                     tuple(starts))
+
+
+def shadow_mask(
+    live: jnp.ndarray,        # bool [lanes, cap]
+    rows: jnp.ndarray,        # int32 [lanes, cap] per-entry destination rows
+    width: int,               # destination row universe per lane
+    extra_rows: Optional[jnp.ndarray] = None,  # int32 [lanes], sentinel=width
+) -> jnp.ndarray:
+    """bool [lanes, width]: destination rows whose AUTHORITATIVE value is a
+    live staged entry (the ring holds it until drained) — these must be
+    excluded from the destination-side validity mask. ``extra_rows`` adds
+    one per-lane row (e.g. the entry being staged this step); the sentinel
+    ``width`` means none. The ONE shadowing implementation — both KV
+    overlays (dense-lane and paged-pool) build their attention masks on it."""
+    lanes = live.shape[0]
+    src = jnp.where(live, rows, width)
+    out = jnp.zeros((lanes, width + 1), jnp.bool_)
+    out = out.at[jnp.arange(lanes)[:, None], src].set(True)
+    if extra_rows is not None:
+        out = out.at[jnp.arange(lanes), extra_rows].set(True)
+    return out[:, :width]
+
+
+def merge_lanes(state: RingState,
+                rows: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flatten a multi-lane ring into ONE entry list for a pooled drain.
+
+    ``state.live`` [lanes, cap] and per-entry destination ``rows``
+    [lanes, cap] flatten (C order — lane-major, matching a
+    ``payload.reshape(lanes * cap, ...)`` of the payload planes) to
+    (rows [lanes*cap], ok [lanes*cap]). Use when every lane drains into
+    the SAME destination memory (e.g. the paged KV pool) so the whole
+    drain is one :func:`scatter_rows` instead of a vmap of per-lane
+    scatters. The caller guarantees cross-lane destination uniqueness
+    (for the paged pool: block ownership)."""
+    return rows.reshape(-1), state.live.reshape(-1)
 
 
 def reset(state: RingState, *, rewind: bool = False) -> RingState:

@@ -124,6 +124,10 @@ class DecisionStats(NamedTuple):
     n_unloaded: jnp.ndarray
 
     @staticmethod
-    def from_mask(unload_mask: jnp.ndarray) -> "DecisionStats":
+    def from_mask(unload_mask: jnp.ndarray, valid=None) -> "DecisionStats":
+        """``valid`` (bool[n], optional) restricts the tally to live
+        requests — inactive serve slots are neither path."""
         u = jnp.sum(unload_mask.astype(jnp.int32))
-        return DecisionStats(unload_mask.shape[0] - u, u)
+        if valid is None:
+            return DecisionStats(unload_mask.shape[0] - u, u)
+        return DecisionStats(jnp.sum(valid.astype(jnp.int32)) - u, u)

@@ -1,3 +1,19 @@
-from .pipeline import DataConfig, MemmapSource, Pipeline, SyntheticSource
+from .pipeline import (
+    DataConfig,
+    MemmapSource,
+    Pipeline,
+    Request,
+    RequestQueue,
+    SyntheticSource,
+    synthetic_requests,
+)
 
-__all__ = ["DataConfig", "MemmapSource", "Pipeline", "SyntheticSource"]
+__all__ = [
+    "DataConfig",
+    "MemmapSource",
+    "Pipeline",
+    "Request",
+    "RequestQueue",
+    "SyntheticSource",
+    "synthetic_requests",
+]

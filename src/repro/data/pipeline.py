@@ -18,6 +18,7 @@ read latency from the training loop.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -92,6 +93,84 @@ def _splitmix(x: np.ndarray) -> np.ndarray:
     x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
     x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
     return (x ^ (x >> np.uint64(31))).astype(np.int64)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt plus its generation budget.
+
+    ``max_new`` counts EVERY emitted token, including the one the prefill
+    produces; the scheduler retires the request after ``max_new`` tokens or
+    on EOS, whichever comes first.
+    """
+
+    req_id: int
+    prompt: np.ndarray               # int32 [plen]
+    max_new: int
+    media: Optional[np.ndarray] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[-1])
+
+
+class RequestQueue:
+    """FIFO request queue feeding the serve scheduler's admissions.
+
+    Strict arrival order: the scheduler admits the HEAD request or nothing
+    (head-of-line blocking keeps admission order == submission order, the
+    property the scheduler-invariant tests pin). Host-side and unsynchronized
+    by design — admission happens between scan segments on one thread.
+    """
+
+    def __init__(self):
+        self._q: "collections.deque[Request]" = collections.deque()
+        self._next_id = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, prompt, max_new: int, media=None) -> int:
+        """Enqueue one request; returns its id (submission order)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1 (the prefill token counts)")
+        rid = self._next_id
+        self._next_id += 1
+        self._q.append(Request(rid, prompt, int(max_new), media))
+        return rid
+
+    def peek(self) -> Request:
+        return self._q[0]
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+
+def synthetic_requests(
+    n: int,
+    prompt_len: int,
+    vocab: int,
+    max_new: int,
+    seed: int = 0,
+    media_shape=None,
+) -> RequestQueue:
+    """Deterministic request workload (splitmix-hashed prompts — the same
+    generator the synthetic training source uses, so every (seed, i) pair
+    reproduces the same request on any host)."""
+    q = RequestQueue()
+    for i in range(n):
+        idx = np.arange(prompt_len, dtype=np.int64) + i * prompt_len
+        prompt = (_splitmix(idx + seed) % vocab).astype(np.int32)
+        media = None
+        if media_shape is not None:
+            flat = _splitmix(
+                np.arange(int(np.prod(media_shape)), dtype=np.int64)
+                + (seed + 1) * (i + 1)
+            )
+            media = (flat % 1024).astype(np.float32).reshape(media_shape) / 512.0 - 1.0
+        q.submit(prompt, max_new, media=media)
+    return q
 
 
 class Pipeline:

@@ -1,14 +1,18 @@
 """KV-cache substrate: dense caches with staged-ring overlay (unload path
 for decode writes, instantiating the unified ``core.ring`` abstraction) and
-a paged pool with page-frequency monitoring."""
+the paged block pool backing the continuous-batching serve scheduler."""
 from .paged import (
-    PagedCache,
-    PageMonitor,
-    allocate_pages,
-    direct_insert,
-    gather_kv,
-    make_paged_cache,
-    write_destination,
+    BlockPool,
+    drain_ring as drain_ring_paged,
+    gather_view,
+    logical_to_physical,
+    make_paged_kv,
+    maybe_drain as maybe_drain_paged,
+    pool_rows,
+    scatter_token,
+    view_len,
+    view_mask,
+    view_rows,
 )
 from .staged import (
     add_ring,
@@ -27,8 +31,9 @@ from .staged import (
 )
 
 __all__ = [
-    "PagedCache", "PageMonitor", "allocate_pages", "direct_insert",
-    "gather_kv", "make_paged_cache", "write_destination",
+    "BlockPool", "drain_ring_paged", "gather_view", "logical_to_physical",
+    "make_paged_kv", "maybe_drain_paged", "pool_rows", "scatter_token",
+    "view_len", "view_mask", "view_rows",
     "add_ring", "drain_ring", "maybe_drain", "overlay_kv", "overlay_masks",
     "overlay_step", "ring_commit", "ring_conflicts", "ring_full",
     "ring_state", "ring_validity", "stage_tile", "strip_ring",

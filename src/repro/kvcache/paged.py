@@ -1,117 +1,316 @@
-"""Paged KV cache with uRDMA write-engine integration.
+"""Paged KV cache: a global pool of fixed-size blocks backing EVERY
+decode-time KV write of the continuous-batching serve scheduler.
 
-Serving-grade cache layout: a global pool of fixed-size pages plus a per-
-sequence page table (vLLM-style, adapted to TPU: pages are dense
-[page_size, H, Dh] tiles so attention gathers whole pages, never elements).
+Layout (vLLM-style, adapted to TPU: blocks are dense [page_size, H, Dh]
+tiles so attention gathers whole blocks, never elements):
 
-The WRITE side is where the paper lands: inserting a token's (k, v) into
-page ``page_table[seq, pos // page_size]`` is a write to an arbitrary
-destination page — direct scatter (offload) vs staging ring + bulk drain
-(unload), routed per-write by the decision module over page-frequency
-counters. This module provides the PAGE-GRANULAR destination mapping and
-the monitor plumbing; the ring mechanics are shared with
-``repro.kvcache.staged``.
+* ``pages_k`` / ``pages_v``  [L, n_blocks, page_size, H, Dh] — the physical
+  pool, shared by every serving slot.
+* ``page_table``             int32 [n_slots, max_pages] — physical block
+  backing each slot's logical page (-1 = unallocated).
+* A slot's *logical* row ``r`` lives at physical pool row
+  ``page_table[slot, r // page_size] * page_size + r % page_size``.
+
+Allocation is a host-side free-list (:class:`BlockPool`): the scheduler
+allocates a slot's blocks at ADMISSION and frees them at RETIREMENT,
+between scan segments — so inside the jitted decode scan the mapping is
+a fixed-shape table lookup, never a data-dependent allocation.
+
+The WRITE side is where the paper lands: inserting a token's (k, v) at an
+arbitrary physical pool row is the RDMA-write analogue (random destination
+page). Both paths go through this module's destination mapping:
+
+* DIRECT (offload): scatter the tile straight to its physical row.
+* STAGED (unload):  append to the per-slot ring overlay (``ring_k`` /
+  ``ring_v`` / ``ring_pos`` / ``ring_fill`` keys on the same cache dict);
+  attention reads pool-view ∪ ring; drains bulk-copy the ring into the
+  pool through ``core.ring.scatter_rows`` (-> the ``staged_scatter``
+  Pallas kernel on TPU). Ring entries record LOGICAL rows — physical
+  rows are resolved through the page table at drain time, so a drain
+  stays correct even though the pool is shared across slots (block
+  ownership keeps drain destinations unique across slots).
+
+The decision module's *region* for a write is its physical BLOCK id —
+interleaved multi-slot traffic therefore hits a genuinely shared region
+universe, exactly the mixed write stream the paper's monitor sees.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
-from ..core.monitor import ExactMonitor, MonitorState
+from ..core import ring as R
 
-
-class PagedCache(NamedTuple):
-    pages_k: jnp.ndarray     # [n_pages, page_size, H, Dh]
-    pages_v: jnp.ndarray     # [n_pages, page_size, H, Dh]
-    page_table: jnp.ndarray  # int32 [B, max_pages_per_seq]
-    lengths: jnp.ndarray     # int32 [B] tokens written per sequence
-    n_allocated: jnp.ndarray  # int32 scalar — pages handed out so far
+PagedKV = Dict[str, jnp.ndarray]
 
 
-def make_paged_cache(
-    n_pages: int, page_size: int, h: int, dh: int, batch: int,
-    max_pages_per_seq: int, dtype=jnp.float32,
-) -> PagedCache:
-    return PagedCache(
-        pages_k=jnp.zeros((n_pages, page_size, h, dh), dtype),
-        pages_v=jnp.zeros((n_pages, page_size, h, dh), dtype),
-        page_table=jnp.full((batch, max_pages_per_seq), -1, jnp.int32),
-        lengths=jnp.zeros((batch,), jnp.int32),
-        n_allocated=jnp.zeros((), jnp.int32),
-    )
+# ---------------------------------------------------------------------------
+# Host-side block allocator
+# ---------------------------------------------------------------------------
 
 
-def allocate_pages(cache: PagedCache, seq_ids: jnp.ndarray) -> PagedCache:
-    """Give each listed sequence a fresh page if its current one is full.
+class BlockPool:
+    """Free-list allocator over the physical block pool (host side).
 
-    Bump allocation from the global pool (a real deployment frees pages on
-    sequence retirement; eviction policy is out of scope here).
+    LIFO free list: the most recently freed blocks are handed out first
+    (hot pool rows stay hot). ``owner[b]`` tracks which slot holds block
+    ``b`` (-1 = free) — the scheduler-invariant tests audit it directly.
     """
-    ps = cache.pages_k.shape[1]
-    need = (cache.lengths[seq_ids] % ps == 0)
-    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
-    new_page = jnp.where(need, cache.n_allocated + rank, -1)
-    slot = cache.lengths[seq_ids] // ps
-    table = cache.page_table.at[seq_ids, slot].set(
-        jnp.where(need, new_page, cache.page_table[seq_ids, slot]), mode="drop"
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self.owner = np.full((n_blocks,), -1, np.int32)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, slot: int, n: int) -> Optional[np.ndarray]:
+        """Pop ``n`` blocks for ``slot``; None (no partial alloc) if the
+        pool can't cover the request."""
+        if n > len(self._free):
+            return None
+        blocks = np.asarray([self._free.pop() for _ in range(n)], np.int32)
+        self.owner[blocks] = slot
+        return blocks
+
+    def free_slot(self, slot: int) -> np.ndarray:
+        """Return all of ``slot``'s blocks to the free list."""
+        blocks = np.flatnonzero(self.owner == slot).astype(np.int32)
+        for b in blocks:
+            self._free.append(int(b))
+        self.owner[blocks] = -1
+        return blocks
+
+
+# ---------------------------------------------------------------------------
+# Device cache construction / addressing
+# ---------------------------------------------------------------------------
+
+
+def make_paged_kv(
+    n_layers: int,
+    n_blocks: int,
+    page_size: int,
+    n_slots: int,
+    max_pages: int,
+    h: int,
+    dh: int,
+    dtype=jnp.float32,
+    ring_size: int = 0,
+) -> PagedKV:
+    """Paged cache dict; ``ring_size > 0`` attaches the staging overlay."""
+    cache = {
+        "pages_k": jnp.zeros((n_layers, n_blocks, page_size, h, dh), dtype),
+        "pages_v": jnp.zeros((n_layers, n_blocks, page_size, h, dh), dtype),
+        "page_table": jnp.full((n_slots, max_pages), -1, jnp.int32),
+    }
+    if ring_size:
+        cache["ring_k"] = jnp.zeros((n_layers, n_slots, ring_size, h, dh), dtype)
+        cache["ring_v"] = jnp.zeros_like(cache["ring_k"])
+        # staged entries record LOGICAL rows (-1 = empty); the page table
+        # resolves them to physical pool rows at drain time
+        cache["ring_pos"] = jnp.full((n_slots, ring_size), -1, jnp.int32)
+        cache["ring_fill"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def has_ring(cache: PagedKV) -> bool:
+    return "ring_pos" in cache
+
+
+def pool_rows(cache: PagedKV) -> int:
+    """Total physical rows (the out-of-range write sentinel)."""
+    nb, ps = cache["pages_k"].shape[1:3]
+    return nb * ps
+
+
+def view_len(cache: PagedKV) -> int:
+    """Logical rows per slot (max_pages * page_size)."""
+    return cache["page_table"].shape[1] * cache["pages_k"].shape[2]
+
+
+def logical_to_physical(cache: PagedKV, rows: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot logical row -> physical pool row. ``rows`` int32 [n_slots].
+
+    Rows on unallocated pages (or negative sentinels) map to the
+    out-of-range sentinel ``pool_rows`` so downstream scatters DROP them —
+    a retired or empty slot can never write."""
+    ps = cache["pages_k"].shape[2]
+    n_slots = cache["page_table"].shape[0]
+    safe = jnp.clip(rows, 0, view_len(cache) - 1)
+    block = cache["page_table"][jnp.arange(n_slots), safe // ps]
+    phys = block * ps + safe % ps
+    ok = (rows >= 0) & (rows < view_len(cache)) & (block >= 0)
+    return jnp.where(ok, phys, pool_rows(cache)).astype(jnp.int32)
+
+
+def view_rows(cache: PagedKV) -> jnp.ndarray:
+    """int32 [n_slots, V]: physical pool row backing every logical row
+    (clamped to 0 where unallocated — mask with :func:`view_mask`)."""
+    ps = cache["pages_k"].shape[2]
+    table = cache["page_table"]
+    base = jnp.maximum(table, 0) * ps  # [n_slots, max_pages]
+    rows = base[:, :, None] + jnp.arange(ps)[None, None, :]
+    return rows.reshape(table.shape[0], -1).astype(jnp.int32)
+
+
+def view_mask(cache: PagedKV, pos: jnp.ndarray) -> jnp.ndarray:
+    """bool [n_slots, V]: logical rows holding live KV once row ``pos``
+    is written this step (linear addressing: rows 0..pos on allocated
+    pages)."""
+    ps = cache["pages_k"].shape[2]
+    v = view_len(cache)
+    logical = jnp.arange(v)[None, :]
+    allocated = jnp.repeat(cache["page_table"] >= 0, ps, axis=1)
+    return (logical <= pos[:, None]) & allocated
+
+
+def gather_view(pages_l: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """One layer's per-slot contiguous KV view.
+
+    pages_l [n_blocks, ps, H, Dh], rows int32 [n_slots, V] ->
+    [n_slots, V, H, Dh]. Rows of unallocated pages gather block 0 garbage;
+    the attention mask (:func:`view_mask`) excludes them."""
+    flat = pages_l.reshape((-1,) + pages_l.shape[2:])
+    return flat[rows]
+
+
+def scatter_token(
+    pages_l: jnp.ndarray,   # [n_blocks, ps, H, Dh]
+    dest: jnp.ndarray,      # int32 [n_slots] physical rows (sentinel drops)
+    tile: jnp.ndarray,      # [n_slots, H, Dh]
+) -> jnp.ndarray:
+    """Direct (offload-path) write of one decode step's tiles."""
+    flat = pages_l.reshape((-1,) + pages_l.shape[2:])
+    flat = flat.at[dest].set(tile.astype(flat.dtype), mode="drop")
+    return flat.reshape(pages_l.shape)
+
+
+# ---------------------------------------------------------------------------
+# Staging-ring overlay (instantiation of core.ring, logical-row keys)
+# ---------------------------------------------------------------------------
+
+
+def ring_state(cache: PagedKV) -> R.RingState:
+    """Dense-mode ring bookkeeping view (``core.ring.dense_state`` on this
+    overlay's logical-row metadata — cf. ``kvcache.staged.ring_state``)."""
+    return R.dense_state(cache["ring_pos"], cache["ring_fill"])
+
+
+def ring_validity(cache: PagedKV) -> jnp.ndarray:
+    return ring_state(cache).live
+
+
+def ring_full(cache: PagedKV) -> jnp.ndarray:
+    return R.full(ring_state(cache), wrap=False)
+
+
+def ring_conflicts(cache: PagedKV, pos: jnp.ndarray) -> jnp.ndarray:
+    """True if this step's logical destinations collide with pending staged
+    entries of the same slot (drain first: keeps drain rows unique)."""
+    return R.conflicts(ring_state(cache), (cache["ring_pos"],),
+                       (pos[:, None],))
+
+
+def stage_tile(plane: jnp.ndarray, tile: jnp.ndarray,
+               cur: jnp.ndarray) -> jnp.ndarray:
+    """Append one layer's tiles [n_slots, H, Dh] at ring column ``cur``."""
+    return R.push_column(plane, cur, tile, axis=1)
+
+
+def ring_commit(cache: PagedKV, pos: jnp.ndarray,
+                unload_mask: jnp.ndarray) -> PagedKV:
+    """Metadata half of the append: record logical rows (-1 where the slot
+    wrote direct or is retired) at the cursor, advance it."""
+    cur = cache["ring_fill"]
+    rows = jnp.where(unload_mask, pos, -1).astype(jnp.int32)
+    cache = dict(cache)
+    cache["ring_pos"] = R.push_column(cache["ring_pos"], cur, rows)
+    cache["ring_fill"] = cur + 1
+    return cache
+
+
+def overlay_step(
+    cache: PagedKV,
+    vmask: jnp.ndarray,        # bool [n_slots, V] view validity after write
+    pos: jnp.ndarray,          # int32 [n_slots] this step's logical rows
+    unload_mask: jnp.ndarray,  # bool [n_slots] True = stage
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-step overlay bookkeeping for ``decode_step_paged``.
+
+    Returns (full_mask [n_slots, V+R] attention validity over view ∪ ring,
+    cur — the ring column this step appends to). The authoritative value
+    for a staged entry lives in the RING until drained, so its logical row
+    is shadowed out of the view mask.
+    """
+    b, v = vmask.shape
+    r = cache["ring_pos"].shape[1]
+    cur = cache["ring_fill"]
+    ring_valid = ring_validity(cache) | (
+        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
     )
-    return cache._replace(
-        page_table=table,
-        n_allocated=cache.n_allocated + jnp.sum(need.astype(jnp.int32)),
+    shadowed = R.shadow_mask(
+        ring_validity(cache), cache["ring_pos"], v,
+        extra_rows=jnp.where(unload_mask, pos, v),
+    )
+    full_mask = jnp.concatenate([vmask & ~shadowed, ring_valid], axis=1)
+    return full_mask, cur
+
+
+def drain_ring(cache: PagedKV, use_kernel: bool = False) -> PagedKV:
+    """Bulk-copy all staged entries into the pool, empty the ring.
+
+    Per layer, ALL slots' entries flatten into ONE entry list (``core.ring.
+    merge_lanes``) and land with a single ``scatter_rows`` call — block
+    ownership makes destinations unique across slots, conflict-forced
+    drains make them unique within a slot (the ``staged_scatter``
+    precondition)."""
+    l, b, r, h, dh = cache["ring_k"].shape
+    n_phys = pool_rows(cache)
+    # resolve logical -> physical per ring column, then flatten lanes
+    phys = jax.vmap(lambda rows: logical_to_physical(cache, rows),
+                    in_axes=1, out_axes=1)(cache["ring_pos"])
+    rows, ok = R.merge_lanes(ring_state(cache), phys)
+    # logical_to_physical maps every invalid row to exactly n_phys, which
+    # scatter_rows drops — no re-clamp needed
+
+    def drain_layer(pages_l, staging_l):
+        flat = pages_l.reshape(n_phys, h * dh)
+        out = R.scatter_rows(flat, staging_l.reshape(b * r, h * dh),
+                             rows, ok, use_kernel=use_kernel)
+        return out.reshape(pages_l.shape)
+
+    new_k = jax.vmap(drain_layer)(cache["pages_k"], cache["ring_k"])
+    new_v = jax.vmap(drain_layer)(cache["pages_v"], cache["ring_v"])
+    return dict(
+        cache,
+        pages_k=new_k,
+        pages_v=new_v,
+        ring_pos=jnp.full_like(cache["ring_pos"], -1),
+        ring_fill=jnp.zeros_like(cache["ring_fill"]),
     )
 
 
-def write_destination(cache: PagedCache, seq_ids: jnp.ndarray):
-    """(page id, row within page) for each sequence's next token."""
-    ps = cache.pages_k.shape[1]
-    pos = cache.lengths[seq_ids]
-    page = cache.page_table[seq_ids, pos // ps]
-    return page, pos % ps
-
-
-def direct_insert(
-    cache: PagedCache,
-    seq_ids: jnp.ndarray,   # int32 [n]
-    k_new: jnp.ndarray,     # [n, H, Dh]
-    v_new: jnp.ndarray,
-) -> PagedCache:
-    """Offload path: scatter each token straight into its page."""
-    page, row = write_destination(cache, seq_ids)
-    pk = cache.pages_k.at[page, row].set(k_new.astype(cache.pages_k.dtype), mode="drop")
-    pv = cache.pages_v.at[page, row].set(v_new.astype(cache.pages_v.dtype), mode="drop")
-    lengths = cache.lengths.at[seq_ids].add(1)
-    return cache._replace(pages_k=pk, pages_v=pv, lengths=lengths)
-
-
-def gather_kv(cache: PagedCache, seq_id: jnp.ndarray, max_len: int):
-    """Assemble one sequence's [max_len, H, Dh] kv view + validity mask."""
-    ps = cache.pages_k.shape[1]
-    n_slots = max_len // ps
-    pages = cache.page_table[seq_id, :n_slots]  # [n_slots]
-    k = cache.pages_k[jnp.maximum(pages, 0)]    # [n_slots, ps, H, Dh]
-    v = cache.pages_v[jnp.maximum(pages, 0)]
-    k = k.reshape(max_len, *k.shape[2:])
-    v = v.reshape(max_len, *v.shape[2:])
-    valid = (jnp.arange(max_len) < cache.lengths[seq_id]) & jnp.repeat(
-        pages >= 0, ps
+def maybe_drain(
+    cache: PagedKV,
+    use_kernel: bool = False,
+    incoming_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[PagedKV, jnp.ndarray]:
+    """Fixed-shape conditional drain: ring full OR incoming logical rows
+    conflict with pending entries. Returns (cache, drained bool)."""
+    due = ring_full(cache)
+    if incoming_pos is not None:
+        due = due | ring_conflicts(cache, incoming_pos)
+    cache = lax.cond(
+        due,
+        lambda c: drain_ring(c, use_kernel=use_kernel),
+        lambda c: dict(c),
+        cache,
     )
-    return k, v, valid
-
-
-class PageMonitor(NamedTuple):
-    """Page-frequency counters — the decision module's monitor for KV writes."""
-
-    state: MonitorState
-
-    @staticmethod
-    def create(n_pages: int) -> "PageMonitor":
-        return PageMonitor(ExactMonitor(n_pages).init())
-
-    def update(self, n_pages: int, pages: jnp.ndarray) -> "PageMonitor":
-        mon = ExactMonitor(n_pages)
-        return PageMonitor(mon.update(self.state, pages))
-
-    def counts(self) -> jnp.ndarray:
-        return self.state.counts
+    return cache, due

@@ -59,15 +59,8 @@ def strip_ring(cache: Cache) -> Cache:
 
 
 def ring_state(cache: Cache) -> R.RingState:
-    """Shared-bookkeeping view of the cache's ring fields (dense mode:
-    entries occupy columns [0, fill); a lane is live where a destination
-    slot was recorded)."""
-    r = cache["ring_slot"].shape[1]
-    filled = jnp.arange(r)[None, :] < cache["ring_fill"]
-    return R.RingState(
-        live=filled & (cache["ring_slot"] >= 0),
-        head=cache["ring_fill"],
-    )
+    """Shared-bookkeeping view of the cache's ring fields (dense mode)."""
+    return R.dense_state(cache["ring_slot"], cache["ring_fill"])
 
 
 def ring_validity(cache: Cache) -> jnp.ndarray:
@@ -111,17 +104,12 @@ def ring_commit(cache: Cache, slots: jnp.ndarray,
 def _shadowed(cache: Cache, b: int, clen: int,
               extra_slot: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """bool [B, S]: main-cache slots whose authoritative value is pending
-    in the ring (must be excluded from the base attention mask). The ONE
-    implementation of shadowing — ``overlay_masks`` and ``overlay_step``
-    both build on it. ``extra_slot`` [B] adds one per-sequence slot
-    (sentinel ``clen`` = none), e.g. the entry being staged this step."""
-    live = ring_validity(cache)
-    src = jnp.where(live, cache["ring_slot"], clen)  # clen = none
-    shadowed = jnp.zeros((b, clen + 1), jnp.bool_)
-    shadowed = shadowed.at[jnp.arange(b)[:, None], src].set(True)
-    if extra_slot is not None:
-        shadowed = shadowed.at[jnp.arange(b), extra_slot].set(True)
-    return shadowed[:, :clen]
+    in the ring (must be excluded from the base attention mask) —
+    ``core.ring.shadow_mask`` on this overlay's (validity, slot) view.
+    ``extra_slot`` [B] adds one per-sequence slot (sentinel ``clen`` =
+    none), e.g. the entry being staged this step."""
+    return R.shadow_mask(ring_validity(cache), cache["ring_slot"], clen,
+                         extra_rows=extra_slot)
 
 
 def overlay_step(

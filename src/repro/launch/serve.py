@@ -1,7 +1,15 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched prefill + decode with uRDMA KV-write routing (direct / staged /
-adaptive). Reduced configs on CPU; production shardings under a mesh.
+Two serving modes:
+
+* default — batched prefill + device-resident decode with uRDMA KV-write
+  routing (direct / staged / adaptive) through ``ServeEngine``.
+* ``--batched`` — slot-based continuous batching over the paged KV pool
+  (``BatchedServeEngine``): a stream of ``--requests`` synthetic requests
+  is admitted FIFO into ``--slots`` serving slots, decoded in jitted scan
+  segments with EOS/max-len retirement between them.
+
+Reduced configs on CPU; production shardings under a mesh.
 """
 from __future__ import annotations
 
@@ -12,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
+from ..data import synthetic_requests
 from ..models import build_model, media_spec, needs_media
-from ..serve import ServeConfig, ServeEngine
+from ..serve import BatchConfig, BatchedServeEngine, ServeConfig, ServeEngine
+from ..serve.scheduler import paged_capable
 
 
 def main() -> None:
@@ -26,11 +36,48 @@ def main() -> None:
     ap.add_argument("--write-mode", default="adaptive",
                     choices=("direct", "staged", "adaptive"))
     ap.add_argument("--ring-size", type=int, default=8)
+    ap.add_argument("--batched", action="store_true",
+                    help="continuous batching over the paged KV pool")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="(--batched) synthetic request count")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="(--batched) serving slots")
+    ap.add_argument("--segment-len", type=int, default=16,
+                    help="(--batched) decode steps per scan segment")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0), args.max_seq)
+
+    if args.batched:
+        media_shape = None
+        if needs_media(cfg):
+            media_shape = media_spec(cfg, 1, jnp.float32).shape[1:]
+        queue = synthetic_requests(
+            args.requests, args.prompt_len, cfg.vocab, args.gen_len,
+            media_shape=media_shape,
+        )
+        write_mode = args.write_mode
+        if write_mode != "direct" and not paged_capable(model):
+            print(f"[serve] {cfg.name}: lanes layout is direct-only; "
+                  f"downgrading --write-mode {write_mode} -> direct")
+            write_mode = "direct"
+        eng = BatchedServeEngine(model, params, BatchConfig(
+            max_seq=args.max_seq, n_slots=args.slots,
+            segment_len=args.segment_len, write_mode=write_mode,
+            page_size=args.page_size, ring_size=args.ring_size,
+        ))
+        t0 = time.perf_counter()
+        outputs = eng.serve(queue)
+        dt = time.perf_counter() - t0
+        n_toks = sum(len(t) for t in outputs.values())
+        print(f"[{eng.layout}] served {len(outputs)} requests / {n_toks} "
+              f"tokens in {dt:.2f}s ({n_toks / dt:.1f} tok/s)")
+        print(f"write-path stats: {eng.stats}")
+        return
+
     prompt = jax.random.randint(
         jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab
     )

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ModelConfig
+from ..kvcache import paged as PG
 from ..kvcache import staged as ST
 from . import layers as L
 from .scan import get_scan
@@ -396,6 +397,101 @@ class DecoderLM:
             )
 
         x = L.apply_norm(cfg, params["ln_f"], x[:, -1:])
+        logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
+        return logits, new_cache
+
+    # -- decode (paged pool) -----------------------------------------------
+    def decode_step_paged(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jnp.ndarray,
+        pos: jnp.ndarray,
+        write_mask: jnp.ndarray,
+        unload_mask: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Params]:
+        """One decode step against a PAGED KV pool (``repro.kvcache.paged``).
+
+        tokens [B], pos [B] (logical positions, per-slot) -> logits [B, V'],
+        new cache. ``write_mask`` [B]: False suppresses every KV write for
+        that slot (retired / empty serve slots — their physical destination
+        resolves to the drop sentinel, so a dead slot can never touch the
+        pool). ``unload_mask`` [B] routes live writes: True = stage into
+        the ring overlay (unload path), False/None = direct scatter to the
+        slot's physical row (offload path).
+
+        The per-slot attention view is gathered from the pool through the
+        page table each step — values are identical to the dense cache
+        layout, so paged decode is bit-compatible with ``decode_step``.
+        Linear addressing only: SWA ring addressing and the VLM family
+        stay on the dense-lane path (see DESIGN.md §Arch-applicability).
+        """
+        cfg = self.cfg
+        if self.is_vlm or cfg.sliding_window:
+            raise NotImplementedError(
+                "paged KV decode covers linear-addressed dense caches; "
+                "SWA/VLM serve from dense lanes (DESIGN.md §Arch-applicability)"
+            )
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed_tokens(cfg, params["embed"], tokens[:, None], dtype)
+        ring = PG.has_ring(cache)
+        vmask = PG.view_mask(cache, pos)
+        view_ids = PG.view_rows(cache)
+        if ring:
+            if unload_mask is None:
+                unload_mask = jnp.ones_like(write_mask)
+            unload_mask = unload_mask & write_mask
+            full_mask, cur = PG.overlay_step(cache, vmask, pos, unload_mask)
+            direct = write_mask & ~unload_mask
+        else:
+            full_mask = vmask
+            direct = write_mask
+        # physical destination for the direct subset; sentinel (-1 logical
+        # -> out-of-range physical) DROPS staged and dead slots
+        dest = PG.logical_to_physical(cache, jnp.where(direct, pos, -1))
+
+        def self_body(carry, xs):
+            h = carry
+            if ring:
+                p, pk, pv, rk, rv = xs
+            else:
+                p, pk, pv = xs
+            hn = L.apply_norm(cfg, p["ln1"], h)
+            k_new, v_new = L.project_kv(cfg, p["attn"], hn, pos[:, None])
+            pk = PG.scatter_token(pk, dest, k_new[:, 0])
+            pv = PG.scatter_token(pv, dest, v_new[:, 0])
+            ak = PG.gather_view(pk, view_ids)
+            av = PG.gather_view(pv, view_ids)
+            if ring:
+                rk = PG.stage_tile(rk, k_new[:, 0], cur)
+                rv = PG.stage_tile(rv, v_new[:, 0], cur)
+                ak = jnp.concatenate([ak, rk], axis=1)
+                av = jnp.concatenate([av, rv], axis=1)
+            a = L.decode_attention(cfg, p["attn"], hn, pos, ak, av, full_mask)
+            h = h + a
+            h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+            if ring:
+                return h, (pk, pv, rk, rv)
+            return h, (pk, pv)
+
+        if ring:
+            x, (pks, pvs, rks, rvs) = self._scan(
+                self_body, x,
+                (params["blocks"], cache["pages_k"], cache["pages_v"],
+                 cache["ring_k"], cache["ring_v"]),
+            )
+            new_cache = PG.ring_commit(
+                dict(cache, pages_k=pks, pages_v=pvs, ring_k=rks, ring_v=rvs),
+                pos, unload_mask,
+            )
+        else:
+            x, (pks, pvs) = self._scan(
+                self_body, x,
+                (params["blocks"], cache["pages_k"], cache["pages_v"]),
+            )
+            new_cache = dict(cache, pages_k=pks, pages_v=pvs)
+
+        x = L.apply_norm(cfg, params["ln_f"], x)
         logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
         return logits, new_cache
 

@@ -1,3 +1,13 @@
-from .engine import WRITE_MODES, ServeConfig, ServeEngine
+from .engine import WRITE_MODES, ServeConfig, ServeEngine, make_decision
+from .scheduler import BatchConfig, BatchedServeEngine, SlotState, make_slots
 
-__all__ = ["WRITE_MODES", "ServeConfig", "ServeEngine"]
+__all__ = [
+    "WRITE_MODES",
+    "ServeConfig",
+    "ServeEngine",
+    "make_decision",
+    "BatchConfig",
+    "BatchedServeEngine",
+    "SlotState",
+    "make_slots",
+]

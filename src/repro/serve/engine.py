@@ -47,6 +47,25 @@ from ..kvcache import add_ring, drain_ring, maybe_drain, strip_ring
 WRITE_MODES = ("direct", "staged", "adaptive")
 
 
+def make_decision(write_mode: str, n_regions: int,
+                  hot_threshold: int) -> DecisionModule:
+    """The ONE decision-plane factory for every serving engine.
+
+    Trivial policies make direct/staged a degenerate routing rather than a
+    separate code path; adaptive runs the paper's frequency policy over the
+    region universe the caller monitors (dense engine: per-sequence pages;
+    batched engine: physical pool blocks).
+    """
+    assert write_mode in WRITE_MODES, write_mode
+    monitor = ExactMonitor(n_regions=n_regions)
+    policy = {
+        "direct": AlwaysOffload(),
+        "staged": AlwaysUnload(),
+        "adaptive": FrequencyPolicy(monitor=monitor, threshold=hot_threshold),
+    }[write_mode]
+    return DecisionModule(policy=policy, monitor=monitor)
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_seq: int
@@ -65,17 +84,8 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         n_pages = max(1, cfg.max_seq // cfg.page_size)
-        self.page_monitor = ExactMonitor(n_regions=n_pages)
-        policy = {
-            "direct": AlwaysOffload(),
-            "staged": AlwaysUnload(),
-            "adaptive": FrequencyPolicy(
-                monitor=self.page_monitor, threshold=cfg.hot_threshold
-            ),
-        }[cfg.write_mode]
-        # one decision plane for every mode: the trivial policies make
-        # direct/staged a degenerate routing, not a separate code path
-        self.decision = DecisionModule(policy=policy, monitor=self.page_monitor)
+        self.decision = make_decision(cfg.write_mode, n_pages, cfg.hot_threshold)
+        self.page_monitor = self.decision.monitor
         self.mon_state = self.decision.init_state()
         self.stats = {"direct_writes": 0, "staged_writes": 0, "drains": 0}
         self._decode_fns: Dict[Tuple, Callable] = {}

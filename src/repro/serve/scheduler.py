@@ -1,0 +1,503 @@
+"""Continuous-batching serve scheduler over the paged KV pool.
+
+The repo's serving layer decoded one request (batch) at a time; this module
+turns it into a slot-based continuous-batching system — the setting where
+the paper's decision machinery actually earns its keep: a fixed array of
+serving SLOTS decodes in lock-step inside ONE jitted ``lax.scan``, each
+slot at its own position in its own request, so the DecisionModule sees a
+genuinely interleaved multi-tenant write stream (per-slot destination
+blocks in a SHARED physical pool) instead of a single flow.
+
+Architecture (DESIGN.md §4):
+
+* **SlotState** — per-slot token / position / done-flag / remaining-budget /
+  sample-key / request-id, all fixed-shape int/bool arrays living in the
+  scan carry. Retirement is IN-scan: a slot whose token hits EOS or whose
+  budget is spent flips ``done`` and from the next step neither writes KV
+  (its physical destination resolves to the drop sentinel) nor updates the
+  page-frequency monitor.
+* **Admission** — BETWEEN scan segments, on the host: the head of the FIFO
+  ``RequestQueue`` is admitted into the lowest free slot once the
+  :class:`~repro.kvcache.paged.BlockPool` can cover its page budget
+  (head-of-line blocking preserves FIFO order), its prompt is prefilled
+  (dense, contiguous — the offload path, as in the paper) and scattered
+  into its freshly allocated blocks, and the slot arrays are updated
+  in place. Retired slots return their blocks to the pool first.
+* **KV writes** — every decode-time write resolves through the page table
+  to a physical pool row; direct writes scatter straight in, staged writes
+  ride the per-slot ring overlay and drain in bulk through
+  ``core.ring.scatter_rows``. The monitor's region universe is the
+  physical BLOCK id.
+
+Two cache layouts:
+
+* ``paged``  — dense non-SWA DecoderLM family: the paged pool + ring
+  overlay (all three write modes). Bit-compatible with dense decode.
+* ``lanes``  — every other family (SSM / hybrid / MoE / enc-dec / VLM /
+  SWA): the model's own cache pytree with batch = n_slots; admission
+  overwrites a retired slot's lane wholesale (every cache leaf carries
+  batch on axis 1 — the repo-wide convention). Direct mode only, same
+  scheduler machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.types import make_write_batch
+from ..data.pipeline import RequestQueue
+from ..kvcache import paged as PG
+from ..models.transformer import DecoderLM, direct_kv_write
+from .engine import WRITE_MODES, make_decision
+
+
+def paged_capable(model) -> bool:
+    """Can this model serve from the paged pool? Linear-addressed dense
+    ``DecoderLM`` only: SWA's ring addressing IS its window bound, and the
+    VLM grouped scan lacks the mask plumbing (DESIGN.md §Arch-applicability)."""
+    return (isinstance(model, DecoderLM)
+            and not model.is_vlm
+            and not model.cfg.sliding_window)
+
+
+class SlotState(NamedTuple):
+    """Fixed slot array — the whole scheduler state inside the scan carry.
+
+    token:     int32[S] last emitted token (next step's input)
+    pos:       int32[S] logical position the next decode step writes
+    done:      bool[S]  retired (or never admitted) — inactive slots
+    remaining: int32[S] tokens the slot may still emit
+    key:       uint32[S, 2] per-slot PRNG key data (sampled decode)
+    req_id:    int32[S] owning request id (-1 = empty)
+    """
+
+    token: jnp.ndarray
+    pos: jnp.ndarray
+    done: jnp.ndarray
+    remaining: jnp.ndarray
+    key: jnp.ndarray
+    req_id: jnp.ndarray
+
+
+def make_slots(n_slots: int) -> SlotState:
+    return SlotState(
+        token=jnp.zeros((n_slots,), jnp.int32),
+        pos=jnp.zeros((n_slots,), jnp.int32),
+        done=jnp.ones((n_slots,), jnp.bool_),
+        remaining=jnp.zeros((n_slots,), jnp.int32),
+        key=jnp.zeros((n_slots, 2), jnp.uint32),
+        req_id=jnp.full((n_slots,), -1, jnp.int32),
+    )
+
+
+@dataclasses.dataclass
+class BatchConfig:
+    """Continuous-batching engine configuration.
+
+    ``max_seq`` bounds prompt_len + max_new per request; ``n_blocks = 0``
+    sizes the pool for zero contention (n_slots * pages-per-slot).
+    """
+
+    max_seq: int
+    n_slots: int = 8
+    segment_len: int = 16
+    write_mode: str = "direct"
+    page_size: int = 8
+    n_blocks: int = 0
+    ring_size: int = 8
+    hot_threshold: int = 4
+    greedy: bool = True
+    eos_id: Optional[int] = None
+    drain_kernel: bool = False
+    kv_layout: str = "auto"      # auto | paged | lanes
+    sample_seed: int = 0
+
+
+class BatchedServeEngine:
+    """Slot-based continuous-batching serving engine.
+
+    >>> eng = BatchedServeEngine(model, params, BatchConfig(max_seq=128))
+    >>> outputs = eng.serve(queue)          # {req_id: np.ndarray tokens}
+    """
+
+    def __init__(self, model, params, cfg: BatchConfig):
+        assert cfg.write_mode in WRITE_MODES, cfg.write_mode
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+
+        layout = cfg.kv_layout
+        if layout == "auto":
+            layout = "paged" if paged_capable(model) else "lanes"
+        if layout == "paged" and not paged_capable(model):
+            raise ValueError(
+                f"paged KV serves the linear-addressed dense family; "
+                f"{model.cfg.name} needs kv_layout='lanes'"
+            )
+        if layout == "lanes" and cfg.write_mode != "direct":
+            raise ValueError(
+                "staged/adaptive write modes need the paged layout "
+                "(ring overlay is wired for dense non-SWA caches)"
+            )
+        self.layout = layout
+
+        ps = cfg.page_size
+        self.max_pages = -(-cfg.max_seq // ps)
+        self.n_blocks = cfg.n_blocks or cfg.n_slots * self.max_pages
+        # region universe: physical pool blocks (paged) or per-slot pages
+        # (lanes) — either way the monitor sees the interleaved stream
+        n_regions = (self.n_blocks if layout == "paged"
+                     else cfg.n_slots * self.max_pages)
+        self.decision = make_decision(cfg.write_mode, n_regions,
+                                      cfg.hot_threshold)
+        self.mon_state = self.decision.init_state()
+
+        if layout == "paged":
+            shape = jax.eval_shape(lambda: model.init_cache(1, cfg.max_seq))
+            l, _, _, h, dh = shape["k"].shape
+            self.pool = PG.BlockPool(self.n_blocks)
+            self.cache = PG.make_paged_kv(
+                l, self.n_blocks, ps, cfg.n_slots, self.max_pages, h, dh,
+                dtype=shape["k"].dtype,
+                ring_size=cfg.ring_size if cfg.write_mode != "direct" else 0,
+            )
+        else:
+            self.pool = None
+            self.cache = model.init_cache(cfg.n_slots, cfg.max_seq)
+        self.slots = make_slots(cfg.n_slots)
+
+        # host-side shadows (device round-trips happen once per segment)
+        self._occupied = [False] * cfg.n_slots
+        self._slot_req: List[int] = [-1] * cfg.n_slots
+        self._base_key = jax.random.key(cfg.sample_seed)
+        self.outputs: Dict[int, List[int]] = {}
+        self.stats = {
+            "direct_writes": 0, "staged_writes": 0, "drains": 0,
+            "segments": 0, "admitted": 0, "retired": 0,
+        }
+        self._segment_fn: Optional[Callable] = None
+        self._prefill_fns: Dict[Any, Callable] = {}
+
+    def reset(self) -> None:
+        """Fresh serving state (cache, slots, pool, monitor, outputs) with
+        the compiled segment function retained — benchmark/test runs can
+        re-serve without paying compilation again."""
+        cfg = self.cfg
+        if self.layout == "paged":
+            self.pool = PG.BlockPool(self.n_blocks)
+            l, _, ps, h, dh = self.cache["pages_k"].shape
+            self.cache = PG.make_paged_kv(
+                l, self.n_blocks, ps, cfg.n_slots, self.max_pages, h, dh,
+                dtype=self.cache["pages_k"].dtype,
+                ring_size=cfg.ring_size if cfg.write_mode != "direct" else 0,
+            )
+        else:
+            self.cache = self.model.init_cache(cfg.n_slots, cfg.max_seq)
+        self.slots = make_slots(cfg.n_slots)
+        self.mon_state = self.decision.init_state()
+        self._occupied = [False] * cfg.n_slots
+        self._slot_req = [-1] * cfg.n_slots
+        self.outputs = {}
+        self.stats = {k: 0 for k in self.stats}
+
+    # ------------------------------------------------------------------
+    # segment: the jitted inner loop
+    # ------------------------------------------------------------------
+    def _build_segment(self) -> Callable:
+        model, cfg = self.model, self.cfg
+        paged = self.layout == "paged"
+        ring = paged and cfg.write_mode != "direct"
+        ps, nb, mp = cfg.page_size, self.n_blocks, self.max_pages
+        eos, greedy = cfg.eos_id, cfg.greedy
+        decision = self.decision
+
+        def step(params, carry, _):
+            cache, st, mon, stats = carry
+            active = ~st.done
+            if paged:
+                dest = PG.logical_to_physical(
+                    cache, jnp.where(active, st.pos, -1))
+                region = jnp.minimum(dest // ps, nb - 1)
+            else:
+                region = (jnp.arange(cfg.n_slots) * mp
+                          + jnp.clip(st.pos // ps, 0, mp - 1))
+            unload, mon, _ = decision(
+                mon, make_write_batch(region), active=active)
+            n_u = jnp.sum(unload.astype(jnp.int32))
+            drained = jnp.zeros((), jnp.bool_)
+            if ring:
+                cache, drained = PG.maybe_drain(
+                    cache, use_kernel=cfg.drain_kernel,
+                    incoming_pos=jnp.where(active, st.pos, -1))
+                logits, cache = model.decode_step_paged(
+                    params, cache, st.token, st.pos, active,
+                    unload_mask=unload)
+            elif paged:
+                logits, cache = model.decode_step_paged(
+                    params, cache, st.token, st.pos, active)
+            else:
+                # retired slots never write: redirect their scatter rows
+                # to the out-of-range drop sentinel (SSM recurrent state
+                # has no KV scatter — its lane updates are slot-private
+                # and overwritten wholesale at admission)
+                def masked_writer(kc, vc, k_new, v_new, rows):
+                    return direct_kv_write(
+                        kc, vc, k_new, v_new,
+                        jnp.where(active, rows, kc.shape[1]))
+
+                logits, cache = model.decode_step(
+                    params, cache, st.token, st.pos, kv_writer=masked_writer)
+            if greedy:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                key = st.key
+            else:
+                pairs = jax.vmap(jax.random.split)(
+                    jax.random.wrap_key_data(st.key))
+                nxt = jax.vmap(jax.random.categorical)(
+                    pairs[:, 0], logits).astype(jnp.int32)
+                key = jax.random.key_data(pairs[:, 1])
+            nxt = jnp.where(active, nxt, st.token)
+            remaining = st.remaining - active.astype(jnp.int32)
+            ended = remaining <= 0
+            if eos is not None:
+                ended = ended | (nxt == eos)
+            st = SlotState(
+                token=nxt,
+                pos=st.pos + active.astype(jnp.int32),
+                done=st.done | (active & ended),
+                remaining=remaining,
+                key=key,
+                req_id=st.req_id,
+            )
+            stats = stats + jnp.stack([
+                jnp.sum(active.astype(jnp.int32)) - n_u,
+                n_u,
+                drained.astype(jnp.int32),
+            ])
+            emit = jnp.where(active, nxt, -1)
+            return (cache, st, mon, stats), (emit, active)
+
+        def run(params, cache, st, mon):
+            stats0 = jnp.zeros((3,), jnp.int32)
+            (cache, st, mon, stats), (emits, acts) = lax.scan(
+                lambda c, x: step(params, c, x),
+                (cache, st, mon, stats0),
+                None,
+                length=cfg.segment_len,
+            )
+            if ring:
+                # segment boundary: the host may retire slots and free
+                # their blocks next — the ring must not hold entries that
+                # would later drain into reallocated blocks
+                cache = PG.drain_ring(cache, use_kernel=cfg.drain_kernel)
+            return cache, st, mon, stats, emits, acts
+
+        return jax.jit(run)
+
+    # ------------------------------------------------------------------
+    # admission / retirement (host, between segments)
+    # ------------------------------------------------------------------
+    def _pages_needed(self, plen: int, max_new: int) -> int:
+        # decode writes rows plen .. plen+max_new-2 (the final emitted
+        # token is never consumed, so its KV is never written)
+        return max(1, -(-(plen + max_new - 1) // self.cfg.page_size))
+
+    def _prefill(self, prompts: jnp.ndarray, max_seq: int, media):
+        """Jitted batched prefill, cached per (max_seq, media?) — jit
+        re-specializes per (group size, prompt_len) shape on its own.
+        Admission batches every same-length prompt into ONE prefill call;
+        per-row results are bit-identical to solo prefills, so grouping is
+        invisible to the decode stream."""
+        key = (max_seq, media is not None)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            if media is None:
+                fn = jax.jit(
+                    lambda p, t: self.model.prefill(p, t, max_seq))
+            else:
+                fn = jax.jit(
+                    lambda p, t, m: self.model.prefill(p, t, max_seq, media=m))
+            self._prefill_fns[key] = fn
+        args = (self.params, prompts) if media is None else (
+            self.params, prompts, media)
+        return fn(*args)
+
+    def _admit_group(self, slots: List[int], reqs: List[Any],
+                     blocks: List[Optional[np.ndarray]]) -> None:
+        """Admit a group of same-prompt-length requests with ONE batched
+        prefill + ONE insert + ONE slot-state update."""
+        cfg = self.cfg
+        g, plen = len(reqs), reqs[0].prompt_len
+        ps = cfg.page_size
+        prompts = jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)
+        media = None
+        if reqs[0].media is not None:
+            media = jnp.asarray(np.stack([r.media for r in reqs]))
+        slot_arr = jnp.asarray(slots, jnp.int32)
+
+        if self.layout == "paged":
+            logits, pc = self._prefill(prompts, plen, media)
+            cache = self.cache
+            l, nbp = cache["pages_k"].shape[0], PG.pool_rows(cache)
+            rows = np.arange(plen)
+            phys = np.concatenate(
+                [b[rows // ps] * ps + rows % ps for b in blocks])
+            phys = jnp.asarray(phys, jnp.int32)
+            for pk, src in (("pages_k", "k"), ("pages_v", "v")):
+                flat = cache[pk].reshape((l, nbp) + cache[pk].shape[3:])
+                vals = pc[src][:, :, :plen]  # [L, g, plen, H, Dh]
+                flat = flat.at[:, phys].set(
+                    vals.reshape((l, g * plen) + vals.shape[3:]))
+                cache[pk] = flat.reshape(cache[pk].shape)
+            padded = np.full((g, self.max_pages), -1, np.int32)
+            for i, b in enumerate(blocks):
+                padded[i, : len(b)] = b
+            cache["page_table"] = cache["page_table"].at[slot_arr].set(
+                jnp.asarray(padded))
+            regions = np.concatenate([b[rows // ps] for b in blocks])
+        else:
+            logits, pc = self._prefill(prompts, cfg.max_seq, media)
+            self.cache = jax.tree.map(
+                lambda big, small: big.at[:, slot_arr].set(small),
+                self.cache, pc,
+            )
+            regions = np.concatenate([
+                s * self.max_pages + np.arange(plen) // ps for s in slots])
+        # prefill writes are dense/contiguous -> offload path; they still
+        # heat the page counters (the paper's frequency monitor sees every
+        # write that lands in a region)
+        self.mon_state = self.decision.monitor.update(
+            self.mon_state, jnp.asarray(regions, jnp.int32))
+
+        t0s = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        keys = jax.random.key_data(jax.vmap(
+            lambda i: jax.random.fold_in(self._base_key, i)
+        )(jnp.asarray([r.req_id for r in reqs], jnp.int32)))
+        rem = np.asarray([r.max_new - 1 for r in reqs], np.int32)
+        done0 = rem <= 0
+        if cfg.eos_id is not None:
+            done0 = done0 | (t0s == cfg.eos_id)
+        st = self.slots
+        self.slots = SlotState(
+            token=st.token.at[slot_arr].set(jnp.asarray(t0s)),
+            pos=st.pos.at[slot_arr].set(plen),
+            done=st.done.at[slot_arr].set(jnp.asarray(done0)),
+            remaining=st.remaining.at[slot_arr].set(jnp.asarray(rem)),
+            key=st.key.at[slot_arr].set(keys),
+            req_id=st.req_id.at[slot_arr].set(
+                jnp.asarray([r.req_id for r in reqs], jnp.int32)),
+        )
+        for slot, req, t0 in zip(slots, reqs, t0s):
+            self._occupied[slot] = True
+            self._slot_req[slot] = req.req_id
+            self.outputs[req.req_id] = [int(t0)]
+        self.stats["admitted"] += g
+
+    def _retire(self, slots: List[int]) -> None:
+        for slot in slots:
+            if self.pool is not None:
+                self.pool.free_slot(slot)
+            self._occupied[slot] = False
+            self._slot_req[slot] = -1
+        if self.pool is not None and slots:
+            self.cache["page_table"] = self.cache["page_table"].at[
+                jnp.asarray(slots, jnp.int32)].set(-1)
+        self.stats["retired"] += len(slots)
+
+    def admit(self, queue: RequestQueue) -> int:
+        """Admit from the queue head into free slots (FIFO: head-of-line
+        blocks when the pool can't cover it). Same-prompt-length requests
+        admitted together share one batched prefill. Returns #admitted."""
+        picks: List[tuple] = []  # (slot, req, blocks)
+        for slot in range(self.cfg.n_slots):
+            if not queue:
+                break
+            if self._occupied[slot]:
+                continue
+            req = queue.peek()
+            if req.prompt_len + req.max_new > self.cfg.max_seq:
+                raise ValueError(
+                    f"request {req.req_id}: prompt_len+max_new "
+                    f"{req.prompt_len + req.max_new} > max_seq {self.cfg.max_seq}"
+                )
+            blocks = None
+            if self.pool is not None:
+                needed = self._pages_needed(req.prompt_len, req.max_new)
+                if needed > self.pool.n_blocks:
+                    raise ValueError(
+                        f"request {req.req_id} needs {needed} blocks; "
+                        f"pool holds {self.pool.n_blocks}")
+                blocks = self.pool.alloc(slot, needed)
+                if blocks is None:
+                    break  # FIFO: wait for retirements, don't skip ahead
+            picks.append((slot, queue.pop(), blocks))
+        # group same-length prompts into one prefill dispatch each
+        groups: Dict[int, List[tuple]] = {}
+        for p in picks:
+            groups.setdefault(p[1].prompt_len, []).append(p)
+        for members in groups.values():
+            self._admit_group([m[0] for m in members],
+                              [m[1] for m in members],
+                              [m[2] for m in members])
+        return len(picks)
+
+    # ------------------------------------------------------------------
+    # the serve loop
+    # ------------------------------------------------------------------
+    def run_segment(self) -> np.ndarray:
+        """One jitted scan segment + ONE host readback. Returns the bool
+        [segment_len, n_slots] activity matrix (which steps emitted)."""
+        if self._segment_fn is None:
+            self._segment_fn = self._build_segment()
+        self.cache, self.slots, self.mon_state, stats, emits, acts = (
+            self._segment_fn(self.params, self.cache, self.slots,
+                             self.mon_state))
+        emits, acts = np.asarray(emits), np.asarray(acts)
+        d, s, dr = (int(x) for x in stats)
+        self.stats["direct_writes"] += d
+        self.stats["staged_writes"] += s
+        self.stats["drains"] += dr
+        self.stats["segments"] += 1
+        for slot in range(self.cfg.n_slots):
+            if self._occupied[slot]:
+                toks = emits[acts[:, slot], slot]
+                self.outputs[self._slot_req[slot]].extend(
+                    int(t) for t in toks)
+        return acts
+
+    def retire_done(self) -> int:
+        """Free every occupied-but-done slot (host, between segments)."""
+        done = np.asarray(self.slots.done)
+        retiring = [s for s in range(self.cfg.n_slots)
+                    if self._occupied[s] and bool(done[s])]
+        self._retire(retiring)
+        return len(retiring)
+
+    def serve(self, queue: RequestQueue,
+              max_segments: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drain the queue to completion: admit / scan a segment / collect /
+        retire, until no request is live. Returns {req_id: tokens}."""
+        for _ in range(max_segments):
+            self.retire_done()
+            self.admit(queue)
+            if not any(self._occupied):
+                # admit() marks every admitted slot occupied, so an empty
+                # engine here means nothing was admittable
+                if len(queue) == 0:
+                    break
+                raise RuntimeError(
+                    "queue head unadmittable with an empty engine "
+                    "(request larger than pool capacity?)")
+            # all-done slot arrays would make the segment a no-op: only
+            # scan when at least one slot is live
+            if bool(np.all(np.asarray(self.slots.done))):
+                continue
+            self.run_segment()
+        else:
+            raise RuntimeError(f"serve() exceeded {max_segments} segments")
+        return {rid: np.asarray(t, np.int32) for rid, t in self.outputs.items()}

@@ -7,15 +7,18 @@ import pytest
 
 from repro.configs import get_config
 from repro.kvcache import (
+    BlockPool,
     add_ring,
-    allocate_pages,
-    direct_insert,
     drain_ring,
-    gather_kv,
-    make_paged_cache,
+    gather_view,
+    logical_to_physical,
+    make_paged_kv,
     maybe_drain,
+    pool_rows,
+    scatter_token,
     strip_ring,
-    write_destination,
+    view_mask,
+    view_rows,
 )
 from repro.models import build_model
 
@@ -101,31 +104,47 @@ def test_strip_ring_removes_overlay():
 # ---------------------------------------------------------------------------
 
 
-def test_paged_cache_alloc_insert_gather():
-    cache = make_paged_cache(n_pages=16, page_size=4, h=2, dh=8, batch=3,
-                             max_pages_per_seq=4)
+def test_paged_pool_insert_gather_roundtrip():
+    """Token tiles written through the physical mapping come back, in
+    logical order, through the gathered per-slot view."""
+    pool = BlockPool(16)
+    cache = make_paged_kv(n_layers=1, n_blocks=16, page_size=4, n_slots=3,
+                          max_pages=4, h=2, dh=8)
+    table = np.full((3, 4), -1, np.int32)
+    for s in range(3):
+        table[s, :3] = pool.alloc(s, 3)  # 10 rows -> 3 pages of 4
+    cache["page_table"] = jnp.asarray(table)
     rng = np.random.RandomState(0)
-    seqs = jnp.asarray([0, 1, 2], jnp.int32)
     ref = np.zeros((3, 16, 2, 8), np.float32)
     for t in range(10):
-        cache = allocate_pages(cache, seqs)
         k = jnp.asarray(rng.randn(3, 2, 8), jnp.float32)
-        v = jnp.asarray(rng.randn(3, 2, 8), jnp.float32)
-        cache = direct_insert(cache, seqs, k, v)
+        dest = logical_to_physical(cache, jnp.full((3,), t, jnp.int32))
+        cache["pages_k"] = cache["pages_k"].at[0].set(
+            scatter_token(cache["pages_k"][0], dest, k))
         ref[:, t] = np.asarray(k)
-    assert cache.lengths.tolist() == [10, 10, 10]
-    assert int(cache.n_allocated) == 9  # ceil(10/4)=3 pages x 3 seqs
+    vm = view_mask(cache, jnp.full((3,), 9, jnp.int32))
+    assert vm.tolist()[0] == [True] * 10 + [False] * 2 + [False] * 4
+    kk = gather_view(cache["pages_k"][0], view_rows(cache))
     for b in range(3):
-        kk, vv, valid = gather_kv(cache, jnp.asarray(b), 16)
-        assert valid.tolist() == [True] * 10 + [False] * 6
-        np.testing.assert_allclose(np.asarray(kk[:10]), ref[b, :10], atol=1e-6)
+        np.testing.assert_allclose(np.asarray(kk[b, :10]), ref[b, :10],
+                                   atol=1e-6)
 
 
-def test_write_destination_page_mapping():
-    cache = make_paged_cache(n_pages=8, page_size=4, h=1, dh=4, batch=2,
-                             max_pages_per_seq=4)
-    seqs = jnp.asarray([0, 1], jnp.int32)
-    cache = allocate_pages(cache, seqs)
-    page, row = write_destination(cache, seqs)
-    assert row.tolist() == [0, 0]
-    assert page[0] != page[1]  # each sequence got its own page
+def test_paged_destination_mapping_and_write_masking():
+    pool = BlockPool(8)
+    cache = make_paged_kv(n_layers=1, n_blocks=8, page_size=4, n_slots=2,
+                          max_pages=4, h=1, dh=4)
+    table = np.full((2, 4), -1, np.int32)
+    table[0, 0] = pool.alloc(0, 1)[0]
+    table[1, 0] = pool.alloc(1, 1)[0]
+    cache["page_table"] = jnp.asarray(table)
+    dest = logical_to_physical(cache, jnp.asarray([0, 0], jnp.int32))
+    assert dest[0] != dest[1]                      # own block each
+    assert (dest // 4).tolist() == [table[0, 0], table[1, 0]]
+    # sentinel rows (retired slot / unallocated page) resolve out of range
+    dead = logical_to_physical(cache, jnp.asarray([-1, 4], jnp.int32))
+    assert dead.tolist() == [pool_rows(cache)] * 2
+    before = np.asarray(cache["pages_k"][0])
+    cache["pages_k"] = cache["pages_k"].at[0].set(scatter_token(
+        cache["pages_k"][0], dead, jnp.ones((2, 1, 4), jnp.float32)))
+    np.testing.assert_array_equal(np.asarray(cache["pages_k"][0]), before)

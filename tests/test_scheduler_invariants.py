@@ -1,0 +1,210 @@
+"""Scheduler/allocator invariants (in-repo property harness, seed-swept):
+no two live slots ever share a KV block, freed blocks are reused, retired
+slots never write another byte into the pool, and admission preserves the
+FIFO order of the request queue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import seeds
+from repro.configs import get_config
+from repro.core.decision import DecisionModule
+from repro.core.monitor import ExactMonitor
+from repro.core.policy import FrequencyPolicy
+from repro.core.types import make_write_batch
+from repro.data import synthetic_requests
+from repro.kvcache import BlockPool
+from repro.models import build_model
+from repro.serve import BatchConfig, BatchedServeEngine
+
+
+# ---------------------------------------------------------------------------
+# BlockPool properties
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_ownership_is_disjoint_under_random_churn():
+    for seed in seeds():
+        rng = np.random.RandomState(seed)
+        pool = BlockPool(24)
+        held = {}
+        for _ in range(200):
+            slot = int(rng.randint(0, 6))
+            if slot in held and rng.rand() < 0.5:
+                freed = pool.free_slot(slot)
+                assert sorted(freed) == sorted(held.pop(slot))
+            else:
+                got = pool.alloc(slot, int(rng.randint(1, 4)))
+                if got is None:
+                    assert pool.n_free < 4  # only refuses when short
+                    continue
+                held.setdefault(slot, []).extend(int(b) for b in got)
+            # audit: owner table == held map, blocks disjoint
+            owners = {}
+            for s, blocks in held.items():
+                for b in blocks:
+                    assert b not in owners, "block shared by two slots"
+                    owners[b] = s
+                    assert pool.owner[b] == s
+            assert pool.n_free == 24 - len(owners)
+
+
+def test_block_pool_freed_blocks_are_reused():
+    pool = BlockPool(4)
+    first = pool.alloc(0, 4)
+    assert pool.alloc(1, 1) is None          # exhausted, no partial alloc
+    pool.free_slot(0)
+    second = pool.alloc(1, 4)
+    assert sorted(first.tolist()) == sorted(second.tolist())
+
+
+# ---------------------------------------------------------------------------
+# Engine-level invariants
+# ---------------------------------------------------------------------------
+
+
+def _setup(n_slots=2, n_blocks=0, max_new=6, n_req=5, mode="adaptive"):
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 32)
+    queue = synthetic_requests(n_req, 8, cfg.vocab, max_new, seed=2)
+    eng = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=32, n_slots=n_slots, segment_len=3, page_size=4,
+        write_mode=mode, ring_size=3, hot_threshold=2, n_blocks=n_blocks,
+    ))
+    return eng, queue
+
+
+def test_admission_preserves_fifo_order():
+    """Admission order == submission order, even when the pool is too
+    small to admit every waiting request (head-of-line blocking, never
+    skip-ahead) — and dict insertion order records the admission order."""
+    for n_blocks in (0, 7):  # ample pool / pool forcing waits (3 pages/req)
+        eng, queue = _setup(n_slots=4, n_blocks=n_blocks, n_req=6)
+        out = eng.serve(queue)
+        assert list(out) == list(range(6))
+
+
+def test_live_slots_never_share_blocks_and_tables_match_owner():
+    eng, queue = _setup(n_req=5)
+    for _ in range(200):
+        eng.retire_done()
+        eng.admit(queue)
+        if not any(eng._occupied):
+            break
+        # page tables of occupied slots reference disjoint, owned blocks
+        table = np.asarray(eng.cache["page_table"])
+        seen = set()
+        for s in range(eng.cfg.n_slots):
+            blocks = [b for b in table[s] if b >= 0]
+            if not eng._occupied[s]:
+                assert not blocks
+                continue
+            for b in blocks:
+                assert b not in seen
+                seen.add(b)
+                assert eng.pool.owner[b] == s
+        eng.run_segment()
+    else:
+        raise AssertionError("did not drain")
+
+
+def test_retired_slots_never_write():
+    """After a request retires and its blocks return to the pool, nothing
+    touches them until reallocation — decode continues on the other slot."""
+    eng, queue = _setup(n_slots=2, max_new=3, n_req=2)
+    q2 = synthetic_requests(1, 8, 256, 14, seed=5)  # long request, slot 1
+    q2._q[0].req_id = 99
+    eng.admit(queue)   # two short requests
+    eng.run_segment()  # max_new 3 -> both done after 2 decode steps
+    assert eng.retire_done() == 2
+    freed = [b for b in range(eng.pool.n_blocks) if eng.pool.owner[b] == -1]
+    eng.admit(q2)      # long request reuses SOME freed blocks
+    held = set(np.asarray(eng.cache["page_table"])[:, :].ravel().tolist())
+    untouched = [b for b in freed if b not in held]
+    assert untouched, "need at least one freed, un-reallocated block"
+    snap_k = np.asarray(eng.cache["pages_k"][:, untouched])
+    snap_v = np.asarray(eng.cache["pages_v"][:, untouched])
+    while any(eng._occupied):           # decode the long request to the end
+        eng.run_segment()
+        eng.retire_done()
+    np.testing.assert_array_equal(
+        np.asarray(eng.cache["pages_k"][:, untouched]), snap_k)
+    np.testing.assert_array_equal(
+        np.asarray(eng.cache["pages_v"][:, untouched]), snap_v)
+
+
+def test_inactive_slots_do_not_heat_the_monitor():
+    """DecisionModule with an active mask: masked requests update neither
+    counters nor totals and are excluded from routing/stats."""
+    mon = ExactMonitor(n_regions=8)
+    dm = DecisionModule(policy=FrequencyPolicy(monitor=mon, threshold=2),
+                        monitor=mon)
+    state = dm.init_state()
+    batch = make_write_batch(jnp.asarray([3, 3, 5], jnp.int32))
+    active = jnp.asarray([True, True, False])
+    for _ in range(3):
+        unload, state, stats = dm(state, batch, active=active)
+    assert state.counts[3] == 6 and state.counts[5] == 0
+    assert int(state.total) == 6
+    assert not bool(unload[2])  # inactive never routes anywhere
+    assert int(stats.n_offloaded + stats.n_unloaded) == 2
+
+
+def test_retired_slots_never_write_in_lanes_layout():
+    """The lanes layout must hold the same invariant: a retired slot's
+    cache lane is frozen (its scatter rows redirect to the drop sentinel)
+    while the other slot keeps decoding."""
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 32)
+    eng = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=32, n_slots=2, segment_len=3, page_size=4,
+        kv_layout="lanes",
+    ))
+    q = synthetic_requests(1, 8, cfg.vocab, 3, seed=2)   # retires fast
+    q2 = synthetic_requests(1, 8, cfg.vocab, 12, seed=4)  # keeps decoding
+    q2._q[0].req_id = 1
+    eng.admit(q)
+    eng.admit(q2)
+    eng.run_segment()
+    done = np.asarray(eng.slots.done)
+    assert bool(done[0]) and not bool(done[1])
+    snap = np.asarray(eng.cache["k"][:, 0])  # slot 0 lane, NOT retired yet
+    while any(eng._occupied):
+        eng.run_segment()
+        eng.retire_done()
+    np.testing.assert_array_equal(np.asarray(eng.cache["k"][:, 0]), snap)
+
+
+def test_hysteresis_masked_route_is_deterministic_on_shared_buckets():
+    """A masked (retired) lane holding a stale region id that an active
+    lane also writes must not race the decision memory: only active lanes
+    record, so the bucket deterministically holds the active band."""
+    from repro.core.policy import HysteresisPolicy
+
+    pol = HysteresisPolicy(monitor=ExactMonitor(n_regions=8), lo=2, hi=4)
+    state = pol.init_state()
+    batch = make_write_batch(jnp.asarray([7, 7], jnp.int32))
+    mask = jnp.asarray([False, True])
+    unload, state = pol.route(state, batch, mask=mask)
+    # est(7)=1 < lo -> active lane banded unload; masked lane wrote nothing
+    assert bool(state.last_unload[7])
+    assert unload.tolist() == [False, True]
+    assert int(state.mon.counts[7]) == 1  # masked lane didn't count either
+    # mask everything: memory and counters must be untouched
+    _, state2 = pol.route(state, batch, mask=jnp.zeros((2,), bool))
+    np.testing.assert_array_equal(np.asarray(state2.last_unload),
+                                  np.asarray(state.last_unload))
+    assert int(state2.mon.counts[7]) == 1
+
+
+def test_monitor_counts_follow_interleaved_multi_slot_stream():
+    """The adaptive engine's page counters tally EXACTLY the blocks the
+    live slots wrote (prefill + decode), i.e. the interleaved stream."""
+    eng, queue = _setup(n_req=3, max_new=5, mode="adaptive")
+    eng.serve(queue)
+    counts = np.asarray(eng.mon_state.counts)
+    # 3 requests x (8 prompt rows + 4 decode rows) = 36 monitored writes
+    assert counts.sum() == 3 * (8 + 4)
+    assert int(eng.mon_state.total) == 3 * (8 + 4)
