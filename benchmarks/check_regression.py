@@ -1,0 +1,172 @@
+"""Benchmark-trajectory CI gate: compare a fresh ``serve_modes.py
+--batched --chunked --json`` report against the committed baseline
+(``BENCH_serve.json``) and FAIL on regressions.
+
+Rules (direction-aware, per metric key):
+
+* ``*_tok_s`` / ``*_speedup``  higher is better — fail when the current
+  value drops more than ``--tolerance`` (default 15%) below baseline.
+* ``*_ms`` (TTFT latencies)    lower is better — fail when the current
+  value rises more than ``--tolerance`` above baseline.
+* ``bit_identical``            must be true — any sampling/parity drift
+  fails outright (correctness, not a tolerance).
+* a gated metric present in the baseline but missing from the current
+  report fails (schema drift would otherwise silently drop coverage).
+
+Host classes: absolute tok/s and TTFT numbers are machine-dependent, so
+they are HARD-gated only when the report's ``env`` fingerprint (machine
+arch + cpu count, stamped by serve_modes.py) matches the baseline's.
+On a different host class the absolutes are printed report-only and the
+machine-invariant ratios (``*_speedup``) plus ``bit_identical`` carry the
+gate — refresh the baseline from that runner class to restore the full
+gate (the refreshed file re-pins ``env``).
+
+Non-metric keys (workload shape: slot counts, prompt lengths, ...) are
+compared for equality and WARN on mismatch — a changed workload makes the
+delta table meaningless, so refresh the baseline in the same PR.
+
+Refreshing the baseline (intentional perf/workload changes)::
+
+    PYTHONPATH=src python benchmarks/serve_modes.py --batched --chunked \
+        --json BENCH_serve.json
+
+and commit the result. The tolerance absorbs run-to-run noise on one
+machine, not machine-class changes: moving CI to slower hardware also
+means refreshing the baseline.
+
+Usage::
+
+    python benchmarks/check_regression.py serve_modes.json \
+        [--baseline BENCH_serve.json] [--tolerance 0.15]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HIGHER_BETTER = ("_tok_s", "_speedup")
+LOWER_BETTER = ("_ms",)  # every *_ms metric here is a latency
+
+# Baseline comparison points, not the optimizations under test: the
+# sequential / admission-blocking engines exist to normalize the headline
+# metrics (batched_tok_s, chunked_tok_s, chunked_ttft_*, the speedups).
+# A real substrate regression shows in the headline numbers too, so these
+# denominators print report-only instead of adding failure modes.
+REFERENCE_KEYS = frozenset({
+    "sequential_tok_s", "blocking_tok_s",
+    "blocking_ttft_ms", "blocking_ttft_p95_ms",
+})
+
+
+def classify(key: str):
+    """'up' (higher better) | 'down' (lower better) | 'bool' | None."""
+    if key == "bit_identical":
+        return "bool"
+    for suf in HIGHER_BETTER:
+        if key.endswith(suf):
+            return "up"
+    for suf in LOWER_BETTER:
+        if key.endswith(suf):
+            return "down"
+    return None
+
+
+def compare(baseline: dict, current: dict, tolerance: float):
+    """-> (rows, failures, warnings); rows are delta-table tuples."""
+    rows, failures, warnings = [], [], []
+    same_host = baseline.get("env") == current.get("env")
+    if not same_host:
+        warnings.append(
+            f"host class changed ({baseline.get('env')} -> "
+            f"{current.get('env')}): absolute tok/s and TTFT metrics are "
+            f"report-only; refresh BENCH_serve.json from this runner class "
+            f"to restore the full gate")
+    for section, base_doc in baseline.items():
+        if section == "env":
+            continue
+        cur_doc = current.get(section)
+        if cur_doc is None:
+            failures.append(f"{section}: section missing from current report")
+            continue
+        for key, base in base_doc.items():
+            kind = classify(key)
+            cur = cur_doc.get(key)
+            name = f"{section}.{key}"
+            if kind is None:
+                if cur != base:
+                    warnings.append(
+                        f"{name}: workload changed ({base!r} -> {cur!r}); "
+                        f"refresh BENCH_serve.json in this PR")
+                continue
+            if cur is None:
+                failures.append(f"{name}: gated metric missing from report")
+                continue
+            if kind == "bool":
+                status = "ok" if cur else "FAIL"
+                rows.append((name, base, cur, "-", status))
+                if not cur:
+                    failures.append(f"{name}: must be true, got {cur}")
+                continue
+            delta = (cur - base) / base if base else 0.0
+            bad = (delta < -tolerance if kind == "up"
+                   else delta > tolerance)
+            # machine-dependent absolutes only gate on the same host class;
+            # ratios (speedups) are machine-invariant and always gate;
+            # reference denominators never gate
+            gated = ((same_host or key.endswith("_speedup"))
+                     and key not in REFERENCE_KEYS)
+            status = ("FAIL" if bad else "ok") if gated else "info"
+            rows.append((name, base, cur, f"{delta:+.1%}", status))
+            if bad and gated:
+                failures.append(
+                    f"{name}: {base} -> {cur} ({delta:+.1%}, "
+                    f"tolerance ±{tolerance:.0%})")
+    return rows, failures, warnings
+
+
+def print_table(rows) -> None:
+    if not rows:
+        return
+    headers = ("metric", "baseline", "current", "delta", "status")
+    cols = [max(len(str(v)) for v in [h] + [r[i] for r in rows])
+            for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:<{c}}}" for c in cols)
+    print(fmt.format(*headers))
+    print(fmt.format(*("-" * c for c in cols)))
+    for r in rows:
+        print(fmt.format(*(str(v) for v in r)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="fresh serve_modes.py --json output")
+    default_base = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_serve.json")
+    ap.add_argument("--baseline", default=default_base)
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative regression (default 0.15)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.report) as f:
+        current = json.load(f)
+
+    rows, failures, warnings = compare(baseline, current, args.tolerance)
+    print_table(rows)
+    for w in warnings:
+        print(f"WARNING: {w}")
+    if failures:
+        print(f"\n{len(failures)} regression(s) vs {args.baseline}:")
+        for msg in failures:
+            print(f"  - {msg}")
+        sys.exit(1)
+    print(f"\nOK: no regression beyond ±{args.tolerance:.0%} "
+          f"vs {args.baseline}")
+
+
+if __name__ == "__main__":
+    main()

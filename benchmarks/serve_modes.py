@@ -12,21 +12,27 @@ Two benchmark families:
   slot), same request stream. Reports tok/s for both, the speedup, and
   whether the outputs are bit-identical (they must be: batching is a
   throughput optimization, not a sampling change).
+* chunked prefill (``--chunked``): mixed-phase scheduling (prompts
+  prefilled in chunks INSIDE the decode scan) vs the admission-blocking
+  engine at equal slot count, on a mixed long/short-prompt workload.
+  Reports time-to-first-token (mean/p95) and tok/s for both, plus
+  bit-identity against sequential decode.
 
-CLI:  PYTHONPATH=src python benchmarks/serve_modes.py --batched \
+CLI:  PYTHONPATH=src python benchmarks/serve_modes.py --batched --chunked \
           [--json out.json] [--slots 8] [--requests 16]
-prints one JSON document (stable keys — CI uploads it as the perf
-trajectory artifact).
+prints one JSON document (stable keys — CI gates it against the committed
+``BENCH_serve.json`` baseline via ``benchmarks/check_regression.py``).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import platform
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -44,16 +50,33 @@ def _time_generate(eng, prompt, n, reference):
     return (time.perf_counter() - t0) / n * 1e3
 
 
-def _serve_timed(eng, mk_queue):
-    """(outputs, tok/s) on a warm engine: one compile pass, one timed pass."""
-    eng.serve(mk_queue())
+def _one_pass(eng, mk_queue):
+    """One timed serve pass on a warm engine: (outputs, tok/s, ttft).
+    ``ttft`` maps req_id -> seconds from serve start to the request's
+    first emitted token."""
     eng.reset()
     queue = mk_queue()
     t0 = time.perf_counter()
     outputs = eng.serve(queue)
     dt = time.perf_counter() - t0
-    n_toks = sum(len(t) for t in outputs.values())
-    return outputs, n_toks / dt
+    return outputs, sum(len(t) for t in outputs.values()) / dt, dict(eng.ttft)
+
+
+def _serve_timed(eng, mk_queue, repeats=5):
+    """(outputs, tok/s, ttft) on a warm engine: one compile pass, then
+    best-of-``repeats`` timed passes — background load only ever slows a
+    pass down, so best-of is the low-variance estimator the 15% CI gate
+    needs. The TTFT dict comes from the pass with the lowest mean TTFT,
+    independently of the throughput pick."""
+    eng.serve(mk_queue())
+    best_tps, best_ttft, outputs = 0.0, None, None
+    for _ in range(repeats):
+        outputs, tps, ttft = _one_pass(eng, mk_queue)
+        best_tps = max(best_tps, tps)
+        if best_ttft is None or (np.mean(list(ttft.values()))
+                                 < np.mean(list(best_ttft.values()))):
+            best_ttft = ttft
+    return outputs, best_tps, best_ttft
 
 
 def bench_batched(
@@ -80,8 +103,8 @@ def bench_batched(
             write_mode=write_mode, page_size=8,
         ))
 
-    out_b, tps_b = _serve_timed(mk_engine(n_slots), mk_queue)
-    out_s, tps_s = _serve_timed(mk_engine(1), mk_queue)
+    out_b, tps_b, _ = _serve_timed(mk_engine(n_slots), mk_queue)
+    out_s, tps_s, _ = _serve_timed(mk_engine(1), mk_queue)
     identical = (
         set(out_b) == set(out_s)
         and all(np.array_equal(out_b[r], out_s[r]) for r in out_b)
@@ -95,6 +118,94 @@ def bench_batched(
         "batched_tok_s": round(tps_b, 2),
         "sequential_tok_s": round(tps_s, 2),
         "batched_speedup": round(tps_b / tps_s, 3),
+        "bit_identical": bool(identical),
+    }
+
+
+def _ttft_ms(ttft: dict) -> dict:
+    vals = np.asarray(sorted(ttft.values())) * 1e3
+    return {
+        "mean": round(float(vals.mean()), 2),
+        "p95": round(float(np.percentile(vals, 95)), 2),
+    }
+
+
+def _serve_timed_paired(eng_a, eng_b, mk_queue, repeats=5):
+    """Best-of-``repeats`` for TWO engines with their passes INTERLEAVED
+    (A, B, A, B, ...), so background-load swings hit both sides of the
+    comparison — the gated ratio metrics stay stable even when absolute
+    numbers drift."""
+    eng_a.serve(mk_queue())
+    eng_b.serve(mk_queue())
+    results = []
+    for eng in (eng_a, eng_b):
+        results.append({"tps": 0.0, "ttft": None, "out": None, "eng": eng})
+    for _ in range(repeats):
+        for res in results:
+            out, tps, ttft = _one_pass(res["eng"], mk_queue)
+            res["out"] = out
+            res["tps"] = max(res["tps"], tps)
+            if res["ttft"] is None or (np.mean(list(ttft.values()))
+                                       < np.mean(list(res["ttft"].values()))):
+                res["ttft"] = ttft
+    a, b = results
+    return (a["out"], a["tps"], a["ttft"]), (b["out"], b["tps"], b["ttft"])
+
+
+def bench_chunked(
+    arch: str = "stablelm-1.6b",
+    n_slots: int = 4,
+    n_requests: int = 24,
+    long_prompt: int = 64,
+    short_prompt: int = 8,
+    max_new: int = 17,
+    chunk_size: int = 32,
+    segment_len: int = 4,
+) -> dict:
+    """Mixed-phase chunked prefill vs the admission-blocking engine, equal
+    slot count, on a mixed long/short-prompt workload (every 4th request
+    carries the long prompt — the stream the monolithic host-side prefill
+    stalls on; 6 admission waves over 4 slots make the stall recurrent).
+    Sequential decode (one slot, blocking) is the bit-parity oracle:
+    chunking must change WHEN tokens appear, never WHICH."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    max_seq = long_prompt + max_new + 8
+    params = model.init(jax.random.key(0), max_seq)
+    plens = [long_prompt] + [short_prompt] * 3
+    mk_queue = lambda: synthetic_requests(  # noqa: E731
+        n_requests, plens, cfg.vocab, max_new, seed=11)
+
+    def mk_engine(slots, chunked):
+        return BatchedServeEngine(model, params, BatchConfig(
+            max_seq=max_seq, n_slots=slots, segment_len=segment_len,
+            page_size=8, chunked=chunked, chunk_size=chunk_size,
+        ))
+
+    (out_c, tps_c, ttft_c), (out_b, tps_b, ttft_b) = _serve_timed_paired(
+        mk_engine(n_slots, True), mk_engine(n_slots, False), mk_queue)
+    out_s, _, _ = _serve_timed(mk_engine(1, False), mk_queue)
+    identical = (
+        set(out_c) == set(out_b) == set(out_s)
+        and all(np.array_equal(out_c[r], out_s[r]) for r in out_c)
+        and all(np.array_equal(out_b[r], out_s[r]) for r in out_b)
+    )
+    tc, tb = _ttft_ms(ttft_c), _ttft_ms(ttft_b)
+    return {
+        "arch": arch,
+        "n_slots": n_slots,
+        "n_requests": n_requests,
+        "long_prompt": long_prompt,
+        "short_prompt": short_prompt,
+        "chunk_size": chunk_size,
+        "tokens_per_request": max_new,
+        "chunked_tok_s": round(tps_c, 2),
+        "blocking_tok_s": round(tps_b, 2),
+        "chunked_ttft_ms": tc["mean"],
+        "chunked_ttft_p95_ms": tc["p95"],
+        "blocking_ttft_ms": tb["mean"],
+        "blocking_ttft_p95_ms": tb["p95"],
+        "ttft_speedup": round(tb["mean"] / tc["mean"], 3),
         "bit_identical": bool(identical),
     }
 
@@ -138,6 +249,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batched", action="store_true",
                     help="run the continuous-batching throughput comparison")
+    ap.add_argument("--chunked", action="store_true",
+                    help="run the chunked-prefill TTFT/throughput comparison "
+                         "on its PINNED mixed long/short-prompt workload (the "
+                         "CI-gated trajectory; --slots/--requests/--prompt-len/"
+                         "--max-new/--write-mode apply to --batched only)")
     ap.add_argument("--json", default=None, help="write the JSON report here")
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--slots", type=int, default=8)
@@ -148,12 +264,20 @@ def main() -> None:
                     choices=("direct", "staged", "adaptive"))
     args = ap.parse_args()
 
-    if args.batched:
-        report = bench_batched(
-            arch=args.arch, n_slots=args.slots, n_requests=args.requests,
-            prompt_len=args.prompt_len, max_new=args.max_new,
-            write_mode=args.write_mode,
-        )
+    if args.batched or args.chunked:
+        # host-class fingerprint: check_regression.py gates the absolute
+        # tok/s / TTFT metrics only when baseline and report come from the
+        # same class (ratios + bit-identity are gated unconditionally)
+        report = {"env": {"machine": platform.machine(),
+                          "cpus": os.cpu_count()}}
+        if args.batched:
+            report["batched"] = bench_batched(
+                arch=args.arch, n_slots=args.slots, n_requests=args.requests,
+                prompt_len=args.prompt_len, max_new=args.max_new,
+                write_mode=args.write_mode,
+            )
+        if args.chunked:
+            report["chunked"] = bench_chunked(arch=args.arch)
     else:
         report = {name: {"value": val, "unit": unit}
                   for name, val, unit in run()}
@@ -162,7 +286,9 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             f.write(doc + "\n")
-    if args.batched and report["batched_speedup"] < 1.0:
+    if args.batched and report["batched"]["batched_speedup"] < 1.0:
+        sys.exit(1)
+    if args.chunked and report["chunked"]["ttft_speedup"] < 1.0:
         sys.exit(1)
 
 

@@ -11,7 +11,7 @@ Run:  PYTHONPATH=src python examples/adaptive_unload_demo.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import ExactMonitor, FrequencyPolicy, sweep_point
+from repro.core import sweep_point
 from repro.core.policy import AlwaysOffload, AlwaysUnload, HintPolicy
 
 N, WARM = 50_000, 5_000

@@ -9,7 +9,6 @@ Shows the paper's three pieces working together on CPU:
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -13,9 +13,9 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from .monitor import CMSMonitor, ExactMonitor, MonitorState, calibrate_threshold
+from .monitor import CMSMonitor, ExactMonitor, calibrate_threshold
 from .policy import top_k_hot_table
-from .types import DecisionStats, WriteBatch
+from .types import PHASE_BULK, DecisionStats, WriteBatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,16 +57,29 @@ class DecisionModule:
         batch (the serve scheduler's slot array): inactive entries never
         update the monitor, never unload, and are excluded from the stats —
         a retired slot's stale region id must not heat a page it no longer
-        owns."""
+        owns.
+
+        Phase-tagged batches (``batch.phase``): PHASE_BULK entries are
+        pinned to the offload path AFTER the policy runs — bulk sequential
+        transfers always win on the direct path (the DPU bulk-vs-scattered
+        transfer result), so no policy may unload them. They still heat the
+        monitor: a prefill-warmed page is hot history the scattered-write
+        policy must see. (Stateful policies with per-region decision memory
+        record their own verdict; the override is applied to the emitted
+        mask, not their memory — bulk writes land on fresh regions whose
+        band the next scattered write re-decides anyway.)"""
         if hasattr(self.policy, "route"):
             unload, state = self.policy.route(state, batch, mask=active)
-            return unload, state, DecisionStats.from_mask(unload, active)
-        if self.monitor is not None:
-            state = self.monitor.update(state, batch.region, mask=active)
-        unload = self.policy.decide(state, batch)
-        if active is not None:
-            unload = unload & active
-        return unload, state, DecisionStats.from_mask(unload, active)
+        else:
+            if self.monitor is not None:
+                state = self.monitor.update(state, batch.region, mask=active)
+            unload = self.policy.decide(state, batch)
+            if active is not None:
+                unload = unload & active
+        if batch.phase is not None:
+            unload = unload & (batch.phase != PHASE_BULK)
+        return unload, state, DecisionStats.from_mask(unload, active,
+                                                      batch.phase)
 
 
 def expert_hot_mask(expert_load: jnp.ndarray, offload_top_k: int) -> jnp.ndarray:

@@ -22,6 +22,14 @@ import jax.numpy as jnp
 OFFLOAD = 0  # keep on the offloaded (RNIC / direct-scatter) path
 UNLOAD = 1   # reroute to the unload (staging buffer + local copy) path
 
+# Write-phase tags (values of ``WriteBatch.phase``). The paper's transfer
+# study splits traffic by shape, not source: small scattered writes are the
+# unload-path candidates, bulk sequential writes always win on the
+# offload/direct path. The serving integration tags each KV write with the
+# phase that produced it so the decision plane can apply that rule.
+PHASE_SCATTERED = 0  # single-row decode-time write (routing is adaptive)
+PHASE_BULK = 1       # contiguous prefill-chunk write (always offload)
+
 
 class WriteBatch(NamedTuple):
     """A batch of RDMA-write-like requests (structure of arrays).
@@ -31,19 +39,25 @@ class WriteBatch(NamedTuple):
     size:    int32[n]  payload bytes (paper evaluates 16 B inlined writes)
     hint:    int32[n]  application hint: 1 = application marked "offload me"
                        (paper's hint-based policy); 0 = no hint
+    phase:   int32[n]  traffic shape tag: PHASE_SCATTERED (decode-style
+                       single-row writes, adaptive routing) or PHASE_BULK
+                       (prefill-chunk bulk writes, pinned to the offload
+                       path). None (legacy constructors) means scattered.
     """
 
     region: jnp.ndarray
     offset: jnp.ndarray
     size: jnp.ndarray
     hint: jnp.ndarray
+    phase: jnp.ndarray = None
 
     @property
     def n(self) -> int:
         return self.region.shape[0]
 
 
-def make_write_batch(region, offset=None, size=None, hint=None) -> WriteBatch:
+def make_write_batch(region, offset=None, size=None, hint=None,
+                     phase=None) -> WriteBatch:
     region = jnp.asarray(region, jnp.int32)
     n = region.shape[0]
     if offset is None:
@@ -52,11 +66,14 @@ def make_write_batch(region, offset=None, size=None, hint=None) -> WriteBatch:
         size = jnp.full((n,), 16, jnp.int32)  # paper: 16 B inlined writes
     if hint is None:
         hint = jnp.zeros((n,), jnp.int32)
+    if phase is None:
+        phase = jnp.full((n,), PHASE_SCATTERED, jnp.int32)
     return WriteBatch(
         jnp.asarray(region, jnp.int32),
         jnp.asarray(offset, jnp.int32),
         jnp.asarray(size, jnp.int32),
         jnp.asarray(hint, jnp.int32),
+        jnp.asarray(phase, jnp.int32),
     )
 
 
@@ -118,16 +135,31 @@ class CPUTLBConfig:
 
 
 class DecisionStats(NamedTuple):
-    """Aggregated routing statistics (for monitoring / EXPERIMENTS.md)."""
+    """Aggregated routing statistics (for monitoring / EXPERIMENTS.md).
+
+    ``n_bulk`` splits the offloaded tally by phase: bulk (prefill-chunk)
+    writes are pinned to the offload path by the decision plane, so
+    ``n_offloaded - n_bulk`` is the scattered traffic the policy chose to
+    keep direct. Zero when the batch carries no phase tags.
+    """
 
     n_offloaded: jnp.ndarray
     n_unloaded: jnp.ndarray
+    n_bulk: jnp.ndarray = jnp.int32(0)
 
     @staticmethod
-    def from_mask(unload_mask: jnp.ndarray, valid=None) -> "DecisionStats":
+    def from_mask(unload_mask: jnp.ndarray, valid=None,
+                  phase=None) -> "DecisionStats":
         """``valid`` (bool[n], optional) restricts the tally to live
-        requests — inactive serve slots are neither path."""
+        requests — inactive serve slots are neither path. ``phase``
+        (int32[n], optional) tallies live PHASE_BULK writes separately."""
         u = jnp.sum(unload_mask.astype(jnp.int32))
+        nb = jnp.int32(0)
+        if phase is not None:
+            bulk = phase == PHASE_BULK
+            if valid is not None:
+                bulk = bulk & valid
+            nb = jnp.sum(bulk.astype(jnp.int32))
         if valid is None:
-            return DecisionStats(unload_mask.shape[0] - u, u)
-        return DecisionStats(jnp.sum(valid.astype(jnp.int32)) - u, u)
+            return DecisionStats(unload_mask.shape[0] - u, u, nb)
+        return DecisionStats(jnp.sum(valid.astype(jnp.int32)) - u, u, nb)

@@ -26,7 +26,6 @@ from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from . import ring as R

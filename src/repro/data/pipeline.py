@@ -117,10 +117,13 @@ class Request:
 class RequestQueue:
     """FIFO request queue feeding the serve scheduler's admissions.
 
-    Strict arrival order: the scheduler admits the HEAD request or nothing
-    (head-of-line blocking keeps admission order == submission order, the
-    property the scheduler-invariant tests pin). Host-side and unsynchronized
-    by design — admission happens between scan segments on one thread.
+    Arrival order is authoritative: the scheduler scans from the head and
+    admits the FIRST request that fits, skipping (``at``/``pop_at``) past
+    ones whose resources can't be covered right now — a skipped request
+    keeps its queue position and is admitted as soon as it fits, so
+    relative order among admissible requests is preserved without
+    head-of-line blocking. Host-side and unsynchronized by design —
+    admission happens between scan segments on one thread.
     """
 
     def __init__(self):
@@ -146,10 +149,24 @@ class RequestQueue:
     def pop(self) -> Request:
         return self._q.popleft()
 
+    def at(self, i: int) -> Request:
+        """The i-th waiting request (0 = head), submission order."""
+        return self._q[i]
+
+    def pop_at(self, i: int) -> Request:
+        """Remove and return the i-th waiting request; later requests keep
+        their relative order (the scheduler's skip-ahead admission)."""
+        if i == 0:
+            return self._q.popleft()
+        self._q.rotate(-i)
+        req = self._q.popleft()
+        self._q.rotate(i)
+        return req
+
 
 def synthetic_requests(
     n: int,
-    prompt_len: int,
+    prompt_len,
     vocab: int,
     max_new: int,
     seed: int = 0,
@@ -157,10 +174,19 @@ def synthetic_requests(
 ) -> RequestQueue:
     """Deterministic request workload (splitmix-hashed prompts — the same
     generator the synthetic training source uses, so every (seed, i) pair
-    reproduces the same request on any host)."""
+    reproduces the same request on any host).
+
+    ``prompt_len`` may be a sequence: request ``i`` gets length
+    ``prompt_len[i % len(prompt_len)]`` — the mixed long/short-prompt
+    workload the chunked-prefill scheduler and its benchmark exercise
+    (request ``i``'s prompt is the same for any surrounding mix).
+    """
+    plens = (list(prompt_len) if hasattr(prompt_len, "__len__")
+             else [int(prompt_len)])
     q = RequestQueue()
     for i in range(n):
-        idx = np.arange(prompt_len, dtype=np.int64) + i * prompt_len
+        plen = int(plens[i % len(plens)])
+        idx = np.arange(plen, dtype=np.int64) + i * plen
         prompt = (_splitmix(idx + seed) % vocab).astype(np.int32)
         media = None
         if media_shape is not None:

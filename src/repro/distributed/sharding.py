@@ -26,12 +26,10 @@ Divisibility-driven schemes (recorded per arch in DESIGN.md):
 """
 from __future__ import annotations
 
-import dataclasses
 from math import prod
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -85,7 +83,6 @@ def param_pspec(cfg: ModelConfig, mesh: Mesh, path: str, shape: Tuple[int, ...])
     """PartitionSpec for one parameter leaf, keyed on its tree path."""
     name = path.split("/")[-1]
     parent = path.split("/")[-2] if "/" in path else ""
-    f = _maybe("data", shape[0], mesh)  # FSDP on dim0 (checked per rule below)
     scheme = attention_scheme(cfg, mesh)
 
     # ---- embeddings / head ----

@@ -12,7 +12,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .cms import cms_query as _cms_query_kernel

@@ -7,7 +7,6 @@ mode would be needlessly slow.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ valid destination rows are unique within one drain batch.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

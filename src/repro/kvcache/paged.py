@@ -150,6 +150,21 @@ def logical_to_physical(cache: PagedKV, rows: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(ok, phys, pool_rows(cache)).astype(jnp.int32)
 
 
+def logical_to_physical_many(cache: PagedKV, rows: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot logical rows -> physical pool rows, ``rows`` int32
+    [n_slots, C] (the chunk generalization of :func:`logical_to_physical`;
+    column ``j`` of slot ``b`` resolves through slot ``b``'s page table).
+    Invalid rows (negative sentinel, out of view, unallocated page) map to
+    the out-of-range sentinel ``pool_rows`` so scatters DROP them."""
+    ps = cache["pages_k"].shape[2]
+    n_slots = cache["page_table"].shape[0]
+    safe = jnp.clip(rows, 0, view_len(cache) - 1)
+    block = cache["page_table"][jnp.arange(n_slots)[:, None], safe // ps]
+    phys = block * ps + safe % ps
+    ok = (rows >= 0) & (rows < view_len(cache)) & (block >= 0)
+    return jnp.where(ok, phys, pool_rows(cache)).astype(jnp.int32)
+
+
 def view_rows(cache: PagedKV) -> jnp.ndarray:
     """int32 [n_slots, V]: physical pool row backing every logical row
     (clamped to 0 where unallocated — mask with :func:`view_mask`)."""
@@ -189,6 +204,22 @@ def scatter_token(
     """Direct (offload-path) write of one decode step's tiles."""
     flat = pages_l.reshape((-1,) + pages_l.shape[2:])
     flat = flat.at[dest].set(tile.astype(flat.dtype), mode="drop")
+    return flat.reshape(pages_l.shape)
+
+
+def scatter_chunk(
+    pages_l: jnp.ndarray,   # [n_blocks, ps, H, Dh]
+    dest: jnp.ndarray,      # int32 [n_slots, C] physical rows (sentinel drops)
+    tiles: jnp.ndarray,     # [n_slots, C, H, Dh]
+) -> jnp.ndarray:
+    """Direct (offload-path) bulk write of one mixed-phase step's tiles —
+    the prefill-chunk analogue of :func:`scatter_token`. Destinations are
+    unique across slots (block ownership) and within a chunk (consecutive
+    logical rows), so the scatter never collides."""
+    flat = pages_l.reshape((-1,) + pages_l.shape[2:])
+    flat = flat.at[dest.reshape(-1)].set(
+        tiles.reshape((-1,) + tiles.shape[2:]).astype(flat.dtype),
+        mode="drop")
     return flat.reshape(pages_l.shape)
 
 
@@ -261,6 +292,54 @@ def overlay_step(
     )
     full_mask = jnp.concatenate([vmask & ~shadowed, ring_valid], axis=1)
     return full_mask, cur
+
+
+def view_chunk_mask(cache: PagedKV, positions: jnp.ndarray) -> jnp.ndarray:
+    """bool [n_slots, C, V]: per-query view validity for a mixed-phase
+    chunk step. ``positions`` int32 [n_slots, C] — query ``j`` of slot
+    ``b`` sits at logical row ``positions[b, j]``; linear addressing means
+    a view row is causally visible when its logical id is <= the query's
+    position, and attendable only on an allocated page (this step's chunk
+    rows are scattered into the pool BEFORE the gather, so in-chunk causal
+    visibility falls out of the same rule)."""
+    ps = cache["pages_k"].shape[2]
+    allocated = jnp.repeat(cache["page_table"] >= 0, ps, axis=1)
+    rows = jnp.arange(view_len(cache))[None, None, :]
+    return (rows <= positions[:, :, None]) & allocated[:, None, :]
+
+
+def overlay_chunk(
+    cache: PagedKV,
+    positions: jnp.ndarray,    # int32 [n_slots, C] per-query logical rows
+    unload_mask: jnp.ndarray,  # bool [n_slots] True = column-0 write stages
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixed-phase generalization of :func:`overlay_step`.
+
+    Returns (full_mask bool [n_slots, C, V+R] attention validity over
+    view ∪ ring, cur — the ring column this step appends to). Only the
+    scattered column-0 (decode-phase) write may stage; prefill chunks are
+    bulk/direct, and a prefilling slot's ring lane is empty (lanes drain at
+    every segment boundary, before the slot could have been admitted). A
+    slot's pending ring entries always hold rows strictly below its current
+    position (conflict-forced drains), so ring validity needs no per-query
+    causal term.
+    """
+    r = cache["ring_pos"].shape[1]
+    cur = cache["ring_fill"]
+    live = ring_validity(cache)
+    ring_valid = live | (
+        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
+    )
+    v = view_len(cache)
+    shadowed = R.shadow_mask(
+        live, cache["ring_pos"], v,
+        extra_rows=jnp.where(unload_mask, positions[:, 0], v),
+    )
+    view_ok = view_chunk_mask(cache, positions) & ~shadowed[:, None, :]
+    c = positions.shape[1]
+    ring_ok = jnp.broadcast_to(ring_valid[:, None, :],
+                               (positions.shape[0], c, r))
+    return jnp.concatenate([view_ok, ring_ok], axis=2), cur
 
 
 def drain_ring(cache: PagedKV, use_kernel: bool = False) -> PagedKV:

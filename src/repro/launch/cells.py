@@ -15,7 +15,6 @@ Step kinds:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -25,7 +24,7 @@ from ..configs.base import ModelConfig, ShapeSpec
 from ..distributed import input_shardings, state_shardings, with_shardings
 from ..models import build_model, input_specs, media_spec, needs_media
 from ..optim import AdamW, warmup_cosine
-from ..train import TrainState, init_train_state, make_train_step
+from ..train import init_train_state, make_train_step
 
 # per-arch microbatch count for the train_4k cell (global batch 256):
 # bounds activation/dispatch memory; tuned from memory_analysis.

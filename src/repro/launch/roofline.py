@@ -30,10 +30,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from ..compat import cost_analysis_dict, use_abstract_mesh
 from ..configs.base import ModelConfig, ShapeSpec

@@ -45,6 +45,14 @@ def main() -> None:
     ap.add_argument("--segment-len", type=int, default=16,
                     help="(--batched) decode steps per scan segment")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunked", action="store_true",
+                    help="(--batched) admit immediately, prefill prompts "
+                         "in chunks inside the decode scan (DESIGN.md §5)")
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="(--chunked) prompt tokens per prefill chunk")
+    ap.add_argument("--long-prompt-len", type=int, default=0,
+                    help="(--batched) if > 0, every 4th request carries a "
+                         "prompt of this length (mixed workload)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -55,8 +63,11 @@ def main() -> None:
         media_shape = None
         if needs_media(cfg):
             media_shape = media_spec(cfg, 1, jnp.float32).shape[1:]
+        plens = args.prompt_len
+        if args.long_prompt_len:
+            plens = [args.long_prompt_len] + [args.prompt_len] * 3
         queue = synthetic_requests(
-            args.requests, args.prompt_len, cfg.vocab, args.gen_len,
+            args.requests, plens, cfg.vocab, args.gen_len,
             media_shape=media_shape,
         )
         write_mode = args.write_mode
@@ -68,13 +79,19 @@ def main() -> None:
             max_seq=args.max_seq, n_slots=args.slots,
             segment_len=args.segment_len, write_mode=write_mode,
             page_size=args.page_size, ring_size=args.ring_size,
+            chunked=args.chunked, chunk_size=args.chunk_size,
         ))
         t0 = time.perf_counter()
         outputs = eng.serve(queue)
         dt = time.perf_counter() - t0
         n_toks = sum(len(t) for t in outputs.values())
-        print(f"[{eng.layout}] served {len(outputs)} requests / {n_toks} "
+        mode = f"{eng.layout}, chunked" if args.chunked else eng.layout
+        print(f"[{mode}] served {len(outputs)} requests / {n_toks} "
               f"tokens in {dt:.2f}s ({n_toks / dt:.1f} tok/s)")
+        if eng.ttft:
+            ms = sorted(v * 1e3 for v in eng.ttft.values())
+            print(f"ttft: mean {sum(ms) / len(ms):.1f} ms, "
+                  f"max {ms[-1]:.1f} ms")
         print(f"write-path stats: {eng.stats}")
         return
 

@@ -15,11 +15,11 @@ import jax
 
 from ..configs import get_config
 from ..data import DataConfig, Pipeline, SyntheticSource
-from ..distributed import state_shardings, with_shardings
+from ..distributed import state_shardings
 from ..models import build_model
 from ..optim import AdamW, warmup_cosine
 from ..train import Trainer, TrainerConfig, init_train_state, make_train_step
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import make_production_mesh
 
 
 def main() -> None:

@@ -309,6 +309,38 @@ def decode_attention(
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
 
 
+def masked_chunk_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,          # [B, C, D] normed chunk activations
+    positions: jnp.ndarray,  # [B, C] absolute query positions
+    k_cache: jnp.ndarray,    # [B, T, Hkv, Dh] gathered KV set
+    v_cache: jnp.ndarray,
+    mask: jnp.ndarray,       # bool [B, C, T] explicit validity (True=attend)
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Chunk queries against a gathered KV set with an EXPLICIT mask.
+
+    The mixed-phase serving step attends per-slot chunk windows over the
+    paged pool view (∪ staging ring), whose validity depends on page-table
+    allocation and ring shadowing — structure the caller owns. With C=1
+    and ``mask = kv_len_mask[:, None, :]`` this is bit-identical to
+    :func:`decode_attention` (same projections, same reduction shapes up
+    to the query axis).
+    """
+    dims = attn_dims(cfg)
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+    if use_rope:
+        q = apply_rope(cfg, q, positions)
+    k = repeat_kv(k_cache, dims.n_heads)
+    v = repeat_kv(v_cache, dims.n_heads)
+    out = sdpa(q, k, v, mask[:, None])  # [B, 1, C, T]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
 def slot_positions(clen: int, last_pos: int) -> jnp.ndarray:
     """Absolute position stored in each cache slot after writing ``last_pos``.
 

@@ -26,7 +26,6 @@ every step, and ``repro.core.policy`` consumes them.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -14,7 +14,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..configs.base import ModelConfig
 from . import layers as L

@@ -13,11 +13,10 @@ of (or alongside) KV caches — which is what makes ``long_500k`` runnable.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..configs.base import ModelConfig
 from . import layers as L
@@ -292,7 +291,6 @@ class ZambaLM:
     def decode_step(self, params, cache, tokens, pos, kv_writer=direct_kv_write):
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
-        b = tokens.shape[0]
         x = L.embed_tokens(cfg, params["embed"], tokens[:, None], dtype)[:, 0]
         shared = params["shared"]
         clen = cache["k"].shape[2]

@@ -20,7 +20,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..configs.base import ModelConfig
 from ..kvcache import paged as PG
@@ -491,6 +490,109 @@ class DecoderLM:
             )
             new_cache = dict(cache, pages_k=pks, pages_v=pvs)
 
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
+        return logits, new_cache
+
+    # -- mixed-phase chunk step (paged pool) --------------------------------
+    def decode_chunk_paged(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jnp.ndarray,      # int32 [B, C] token slab
+        start: jnp.ndarray,       # int32 [B] logical row/position of column 0
+        n_valid: jnp.ndarray,     # int32 [B] live columns (chunk len | 1 | 0)
+        write_mask: jnp.ndarray,  # bool [B] gates every KV write
+        unload_mask: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Params]:
+        """One MIXED-PHASE step against the paged pool: each slot processes
+        a [C]-token slab — a prefill chunk (``n_valid`` prompt tokens from
+        its chunk cursor), a single decode token (``n_valid == 1``, column
+        0), or nothing (``n_valid == 0``, retired/stalled). Column ``j`` of
+        slot ``b`` sits at logical row/position ``start[b] + j``.
+
+        Chunk KV writes are dense consecutive rows — the bulk/offload path
+        (``unload_mask`` may stage only the scattered column-0 decode
+        write). Returns (logits [B, V'] taken at each slot's LAST valid
+        column — the sampling position for both phases — and the new
+        cache).
+
+        Bit-parity: chunk rows land in the pool before the per-slot view is
+        gathered, and every projection/reduction matches the whole-prompt
+        ``prefill`` + ``decode_step_paged`` pair, so a prompt prefilled in
+        chunks decodes the same token stream as one prefilled whole.
+        """
+        cfg = self.cfg
+        if self.is_vlm or cfg.sliding_window:
+            raise NotImplementedError(
+                "paged KV decode covers linear-addressed dense caches; "
+                "SWA/VLM serve from dense lanes (DESIGN.md §Arch-applicability)"
+            )
+        dtype = jnp.dtype(cfg.dtype)
+        b, c = tokens.shape
+        x = L.embed_tokens(cfg, params["embed"], tokens, dtype)
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        wvalid = (jnp.arange(c)[None, :] < n_valid[:, None]) & write_mask[:, None]
+        ring = PG.has_ring(cache)
+        if ring:
+            if unload_mask is None:
+                unload_mask = jnp.zeros((b,), jnp.bool_)
+            unload_mask = unload_mask & wvalid[:, 0]
+            full_mask, cur = PG.overlay_chunk(cache, positions, unload_mask)
+            direct = wvalid & ~unload_mask[:, None]
+        else:
+            full_mask = PG.view_chunk_mask(cache, positions)
+            direct = wvalid
+        dest = PG.logical_to_physical_many(
+            cache, jnp.where(direct, positions, -1))
+        view_ids = PG.view_rows(cache)
+
+        def self_body(carry, xs):
+            h = carry
+            if ring:
+                p, pk, pv, rk, rv = xs
+            else:
+                p, pk, pv = xs
+            hn = L.apply_norm(cfg, p["ln1"], h)
+            k_new, v_new = L.project_kv(cfg, p["attn"], hn, positions)
+            pk = PG.scatter_chunk(pk, dest, k_new)
+            pv = PG.scatter_chunk(pv, dest, v_new)
+            ak = PG.gather_view(pk, view_ids)
+            av = PG.gather_view(pv, view_ids)
+            if ring:
+                rk = PG.stage_tile(rk, k_new[:, 0], cur)
+                rv = PG.stage_tile(rv, v_new[:, 0], cur)
+                ak = jnp.concatenate([ak, rk], axis=1)
+                av = jnp.concatenate([av, rv], axis=1)
+            a = L.masked_chunk_attention(
+                cfg, p["attn"], hn, positions, ak, av, full_mask)
+            h = h + a
+            h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+            if ring:
+                return h, (pk, pv, rk, rv)
+            return h, (pk, pv)
+
+        if ring:
+            x, (pks, pvs, rks, rvs) = self._scan(
+                self_body, x,
+                (params["blocks"], cache["pages_k"], cache["pages_v"],
+                 cache["ring_k"], cache["ring_v"]),
+            )
+            new_cache = PG.ring_commit(
+                dict(cache, pages_k=pks, pages_v=pvs, ring_k=rks, ring_v=rvs),
+                start, unload_mask,
+            )
+        else:
+            x, (pks, pvs) = self._scan(
+                self_body, x,
+                (params["blocks"], cache["pages_k"], cache["pages_v"]),
+            )
+            new_cache = dict(cache, pages_k=pks, pages_v=pvs)
+
+        # logits at each slot's last valid column: the final prompt token
+        # (prefill, phase-flip sampling) or the decode token (column 0)
+        sel = jnp.clip(n_valid - 1, 0)[:, None, None]
+        x = jnp.take_along_axis(x, sel, axis=1)
         x = L.apply_norm(cfg, params["ln_f"], x)
         logits = L.lm_logits(cfg, params["embed"], x)[:, 0]
         return logits, new_cache

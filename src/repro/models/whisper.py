@@ -12,11 +12,10 @@ write engine) + static cross-attention KV precomputed from the encoder.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..configs.base import ModelConfig
 from . import layers as L
@@ -131,7 +130,9 @@ class WhisperModel:
         cfg = self.cfg
         dims = L.attn_dims(cfg)
         dtype = dtype or jnp.dtype(cfg.dtype)
-        mk = lambda s: jnp.zeros((cfg.n_layers, batch, s, dims.n_kv_heads, dims.head_dim), dtype)
+        def mk(s):
+            return jnp.zeros(
+                (cfg.n_layers, batch, s, dims.n_kv_heads, dims.head_dim), dtype)
         return {
             "k": mk(max_seq), "v": mk(max_seq),
             "cross_k": mk(cfg.n_audio_frames), "cross_v": mk(cfg.n_audio_frames),
@@ -179,7 +180,6 @@ class WhisperModel:
         clen = cache["k"].shape[2]
         spos = L.slot_positions(clen, start_pos + c - 1)
         enc_out = self.encode(params, media) if media is not None else None
-        cross_valid = jnp.ones((b, cfg.n_audio_frames), jnp.bool_)
 
         def body(carry, xs):
             h = carry

@@ -8,21 +8,37 @@ slot at its own position in its own request, so the DecisionModule sees a
 genuinely interleaved multi-tenant write stream (per-slot destination
 blocks in a SHARED physical pool) instead of a single flow.
 
-Architecture (DESIGN.md §4):
+Architecture (DESIGN.md §4–§5):
 
-* **SlotState** — per-slot token / position / done-flag / remaining-budget /
-  sample-key / request-id, all fixed-shape int/bool arrays living in the
-  scan carry. Retirement is IN-scan: a slot whose token hits EOS or whose
-  budget is spent flips ``done`` and from the next step neither writes KV
-  (its physical destination resolves to the drop sentinel) nor updates the
+* **SlotState** — per-slot phase / token / position / done-flag /
+  remaining-budget / sample-key / request-id / prompt-length, all
+  fixed-shape int/bool arrays living in the scan carry. Retirement is
+  IN-scan: a slot whose emitted token hits EOS or whose budget is spent
+  flips ``done`` and from the next step neither writes KV (its physical
+  destination resolves to the drop sentinel) nor updates the
   page-frequency monitor.
-* **Admission** — BETWEEN scan segments, on the host: the head of the FIFO
-  ``RequestQueue`` is admitted into the lowest free slot once the
-  :class:`~repro.kvcache.paged.BlockPool` can cover its page budget
-  (head-of-line blocking preserves FIFO order), its prompt is prefilled
-  (dense, contiguous — the offload path, as in the paper) and scattered
-  into its freshly allocated blocks, and the slot arrays are updated
-  in place. Retired slots return their blocks to the pool first.
+* **Mixed-phase segments** (``chunked=True``, paged layout) — prompts are
+  NOT prefilled at admission: a request is admitted immediately with
+  ``phase=PREFILL`` and a chunk cursor at 0, its prompt parked in a padded
+  device-side buffer. Inside the scan each slot processes a
+  [chunk_size]-token slab per step — prefill slots consume the next prompt
+  chunk, decode slots their single sampled token — and a slot flips
+  PREFILL→DECODE in-scan when its cursor crosses the prompt length
+  (emitting its first token from the last prompt position's logits).
+  Prefill writes are bulk/contiguous and phase-tagged ``PHASE_BULK`` so
+  the decision plane pins them to the offload path; scattered decode
+  writes stay adaptive. This dissolves the host-side prefill
+  serialization: long prompts no longer stall the other slots' decode.
+* **Admission** — BETWEEN scan segments, on the host: the FIFO
+  ``RequestQueue`` is scanned in submission order and a request that does
+  not fit (``BlockPool`` can't cover its next allocation) is SKIPPED in
+  favor of later ones that do — it keeps its queue position and is
+  admitted as soon as blocks free up, so relative order among
+  admissible-when-eligible requests is preserved (no head-of-line
+  blocking). With ``chunked=True`` block allocation is per-chunk: a slot
+  holds only the pages the NEXT segment can touch, topped up between
+  segments (a long prompt never reserves its whole footprint at
+  admission; a slot whose top-up fails simply stalls for one segment).
 * **KV writes** — every decode-time write resolves through the page table
   to a physical pool row; direct writes scatter straight in, staged writes
   ride the per-slot ring overlay and drain in bulk through
@@ -32,16 +48,20 @@ Architecture (DESIGN.md §4):
 Two cache layouts:
 
 * ``paged``  — dense non-SWA DecoderLM family: the paged pool + ring
-  overlay (all three write modes). Bit-compatible with dense decode.
+  overlay (all three write modes, in-scan chunked prefill).
 * ``lanes``  — every other family (SSM / hybrid / MoE / enc-dec / VLM /
   SWA): the model's own cache pytree with batch = n_slots; admission
   overwrites a retired slot's lane wholesale (every cache leaf carries
   batch on axis 1 — the repo-wide convention). Direct mode only, same
-  scheduler machinery.
+  scheduler machinery. ``chunked=True`` here runs the prompt through
+  ``model.chunk_prefill`` chunk-by-chunk at admission (host side, same
+  chunk size, bit-identical to whole-prompt prefill) — the in-scan mixed
+  phase needs the paged pool's row addressing.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
@@ -49,11 +69,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..core.types import make_write_batch
+from ..core.types import PHASE_BULK, PHASE_SCATTERED, make_write_batch
 from ..data.pipeline import RequestQueue
 from ..kvcache import paged as PG
 from ..models.transformer import DecoderLM, direct_kv_write
 from .engine import WRITE_MODES, make_decision
+
+# Slot phases (values of SlotState.phase). DONE is not a phase: the `done`
+# flag retires a slot out of both phases.
+PHASE_PREFILL = 0
+PHASE_DECODE = 1
 
 
 def paged_capable(model) -> bool:
@@ -68,30 +93,38 @@ def paged_capable(model) -> bool:
 class SlotState(NamedTuple):
     """Fixed slot array — the whole scheduler state inside the scan carry.
 
-    token:     int32[S] last emitted token (next step's input)
-    pos:       int32[S] logical position the next decode step writes
+    phase:     int32[S] PHASE_PREFILL (consuming prompt chunks) or
+               PHASE_DECODE (sampling); meaningful only while not done
+    token:     int32[S] last emitted token (next decode step's input)
+    pos:       int32[S] next logical row to write: the chunk cursor while
+               prefilling, the decode position afterwards
     done:      bool[S]  retired (or never admitted) — inactive slots
     remaining: int32[S] tokens the slot may still emit
     key:       uint32[S, 2] per-slot PRNG key data (sampled decode)
     req_id:    int32[S] owning request id (-1 = empty)
+    plen:      int32[S] prompt length (the PREFILL→DECODE flip point)
     """
 
+    phase: jnp.ndarray
     token: jnp.ndarray
     pos: jnp.ndarray
     done: jnp.ndarray
     remaining: jnp.ndarray
     key: jnp.ndarray
     req_id: jnp.ndarray
+    plen: jnp.ndarray
 
 
 def make_slots(n_slots: int) -> SlotState:
     return SlotState(
+        phase=jnp.full((n_slots,), PHASE_DECODE, jnp.int32),
         token=jnp.zeros((n_slots,), jnp.int32),
         pos=jnp.zeros((n_slots,), jnp.int32),
         done=jnp.ones((n_slots,), jnp.bool_),
         remaining=jnp.zeros((n_slots,), jnp.int32),
         key=jnp.zeros((n_slots, 2), jnp.uint32),
         req_id=jnp.full((n_slots,), -1, jnp.int32),
+        plen=jnp.zeros((n_slots,), jnp.int32),
     )
 
 
@@ -101,6 +134,9 @@ class BatchConfig:
 
     ``max_seq`` bounds prompt_len + max_new per request; ``n_blocks = 0``
     sizes the pool for zero contention (n_slots * pages-per-slot).
+    ``chunked`` admits prompts immediately and prefills them in
+    ``chunk_size``-token chunks inside the decode scan (paged layout; the
+    lanes layout chunk-prefills at admission instead).
     """
 
     max_seq: int
@@ -116,6 +152,8 @@ class BatchConfig:
     drain_kernel: bool = False
     kv_layout: str = "auto"      # auto | paged | lanes
     sample_seed: int = 0
+    chunked: bool = False
+    chunk_size: int = 8
 
 
 class BatchedServeEngine:
@@ -144,6 +182,8 @@ class BatchedServeEngine:
                 "staged/adaptive write modes need the paged layout "
                 "(ring overlay is wired for dense non-SWA caches)"
             )
+        if cfg.chunked and cfg.chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
         self.layout = layout
 
         ps = cfg.page_size
@@ -170,22 +210,32 @@ class BatchedServeEngine:
             self.pool = None
             self.cache = model.init_cache(cfg.n_slots, cfg.max_seq)
         self.slots = make_slots(cfg.n_slots)
+        # device-side prompt buffer for in-scan chunked prefill
+        self._in_scan_prefill = cfg.chunked and layout == "paged"
+        self.prompts = (jnp.zeros((cfg.n_slots, cfg.max_seq), jnp.int32)
+                        if self._in_scan_prefill else None)
 
         # host-side shadows (device round-trips happen once per segment)
         self._occupied = [False] * cfg.n_slots
         self._slot_req: List[int] = [-1] * cfg.n_slots
+        self._slot_plen: List[int] = [0] * cfg.n_slots
+        self._slot_max_new: List[int] = [0] * cfg.n_slots
+        self._slot_pages: List[int] = [0] * cfg.n_slots
         self._base_key = jax.random.key(cfg.sample_seed)
         self.outputs: Dict[int, List[int]] = {}
+        self.ttft: Dict[int, float] = {}
+        self._t_serve0: Optional[float] = None
         self.stats = {
             "direct_writes": 0, "staged_writes": 0, "drains": 0,
-            "segments": 0, "admitted": 0, "retired": 0,
+            "prefill_writes": 0, "segments": 0, "admitted": 0, "retired": 0,
         }
         self._segment_fn: Optional[Callable] = None
+        self._mixed_fn: Optional[Callable] = None
         self._prefill_fns: Dict[Any, Callable] = {}
 
     def reset(self) -> None:
         """Fresh serving state (cache, slots, pool, monitor, outputs) with
-        the compiled segment function retained — benchmark/test runs can
+        the compiled segment functions retained — benchmark/test runs can
         re-serve without paying compilation again."""
         cfg = self.cfg
         if self.layout == "paged":
@@ -199,16 +249,26 @@ class BatchedServeEngine:
         else:
             self.cache = self.model.init_cache(cfg.n_slots, cfg.max_seq)
         self.slots = make_slots(cfg.n_slots)
+        if self._in_scan_prefill:
+            self.prompts = jnp.zeros((cfg.n_slots, cfg.max_seq), jnp.int32)
         self.mon_state = self.decision.init_state()
         self._occupied = [False] * cfg.n_slots
         self._slot_req = [-1] * cfg.n_slots
+        self._slot_plen = [0] * cfg.n_slots
+        self._slot_max_new = [0] * cfg.n_slots
+        self._slot_pages = [0] * cfg.n_slots
         self.outputs = {}
+        self.ttft = {}
+        self._t_serve0 = None
         self.stats = {k: 0 for k in self.stats}
 
     # ------------------------------------------------------------------
-    # segment: the jitted inner loop
+    # segments: the jitted inner loops
     # ------------------------------------------------------------------
     def _build_segment(self) -> Callable:
+        """Pure-decode segment: every live slot samples one token per step
+        (the steady state; also the only segment the non-chunked engine
+        runs)."""
         model, cfg = self.model, self.cfg
         paged = self.layout == "paged"
         ring = paged and cfg.write_mode != "direct"
@@ -216,9 +276,9 @@ class BatchedServeEngine:
         eos, greedy = cfg.eos_id, cfg.greedy
         decision = self.decision
 
-        def step(params, carry, _):
+        def step(params, enabled, carry, _):
             cache, st, mon, stats = carry
-            active = ~st.done
+            active = ~st.done & enabled
             if paged:
                 dest = PG.logical_to_physical(
                     cache, jnp.where(active, st.pos, -1))
@@ -267,25 +327,28 @@ class BatchedServeEngine:
             if eos is not None:
                 ended = ended | (nxt == eos)
             st = SlotState(
+                phase=st.phase,
                 token=nxt,
                 pos=st.pos + active.astype(jnp.int32),
                 done=st.done | (active & ended),
                 remaining=remaining,
                 key=key,
                 req_id=st.req_id,
+                plen=st.plen,
             )
             stats = stats + jnp.stack([
                 jnp.sum(active.astype(jnp.int32)) - n_u,
                 n_u,
                 drained.astype(jnp.int32),
+                jnp.zeros((), jnp.int32),
             ])
             emit = jnp.where(active, nxt, -1)
             return (cache, st, mon, stats), (emit, active)
 
-        def run(params, cache, st, mon):
-            stats0 = jnp.zeros((3,), jnp.int32)
+        def run(params, cache, st, mon, enabled):
+            stats0 = jnp.zeros((4,), jnp.int32)
             (cache, st, mon, stats), (emits, acts) = lax.scan(
-                lambda c, x: step(params, c, x),
+                lambda c, x: step(params, enabled, c, x),
                 (cache, st, mon, stats0),
                 None,
                 length=cfg.segment_len,
@@ -299,13 +362,179 @@ class BatchedServeEngine:
 
         return jax.jit(run)
 
+    def _build_mixed_segment(self) -> Callable:
+        """Mixed-phase segment (chunked, paged layout): each step every
+        live slot processes a [chunk_size]-token slab — the next prompt
+        chunk (PREFILL) or its one decode token (DECODE, column 0) — and a
+        slot flips PREFILL→DECODE in-scan when its cursor crosses plen,
+        emitting its first token from the last prompt position's logits.
+        Prefill writes are phase-tagged PHASE_BULK: the decision plane
+        pins them to the offload/direct path; scattered decode writes keep
+        adaptive routing."""
+        model, cfg = self.model, self.cfg
+        ring = cfg.write_mode != "direct"
+        ps, nb, c = cfg.page_size, self.n_blocks, cfg.chunk_size
+        eos, greedy = cfg.eos_id, cfg.greedy
+        decision = self.decision
+
+        def step(params, prompts, enabled, carry, _):
+            cache, st, mon, stats = carry
+            active = ~st.done & enabled
+            is_pf = active & (st.phase == PHASE_PREFILL)
+            # token slab: prefill slots read the device prompt buffer at
+            # their chunk cursor; decode slots put their token in column 0
+            offs = jnp.arange(c, dtype=jnp.int32)[None, :]
+            idx = jnp.clip(st.pos[:, None] + offs, 0, prompts.shape[1] - 1)
+            pf_toks = jnp.take_along_axis(prompts, idx, axis=1)
+            dec_toks = jnp.pad(st.token[:, None], ((0, 0), (0, c - 1)))
+            tokens = jnp.where(is_pf[:, None], pf_toks, dec_toks)
+            n_valid = jnp.where(is_pf,
+                                jnp.minimum(c, st.plen - st.pos),
+                                active.astype(jnp.int32))
+            qvalid = offs < n_valid[:, None]
+            rows = st.pos[:, None] + offs
+            # decision plane: ONE flattened phase-tagged batch per step —
+            # bulk prefill rows are pinned offload, decode rows adaptive
+            dest_all = PG.logical_to_physical_many(
+                cache, jnp.where(qvalid, rows, -1))
+            region = jnp.minimum(dest_all // ps, nb - 1)
+            phase_tag = jnp.where(
+                is_pf[:, None] & qvalid, PHASE_BULK, PHASE_SCATTERED)
+            unload_flat, mon, _ = decision(
+                mon,
+                make_write_batch(region.reshape(-1),
+                                 phase=phase_tag.reshape(-1)),
+                active=qvalid.reshape(-1))
+            unload = (unload_flat.reshape(cfg.n_slots, c)[:, 0]
+                      & active & ~is_pf)
+            n_u = jnp.sum(unload.astype(jnp.int32))
+            n_dec = jnp.sum((active & ~is_pf).astype(jnp.int32))
+            n_pf = jnp.sum((qvalid & is_pf[:, None]).astype(jnp.int32))
+            drained = jnp.zeros((), jnp.bool_)
+            if ring:
+                cache, drained = PG.maybe_drain(
+                    cache, use_kernel=cfg.drain_kernel,
+                    incoming_pos=jnp.where(active & ~is_pf, st.pos, -1))
+                logits, cache = model.decode_chunk_paged(
+                    params, cache, tokens, st.pos, n_valid, active,
+                    unload_mask=unload)
+            else:
+                logits, cache = model.decode_chunk_paged(
+                    params, cache, tokens, st.pos, n_valid, active)
+            finishing = is_pf & (st.pos + n_valid >= st.plen)
+            emitting = (active & ~is_pf) | finishing
+            # the first token after the prompt is the prefill ARGMAX in
+            # both engines and both sampling modes (parity with the
+            # non-chunked engine's admission-time t0)
+            t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if greedy:
+                nxt, key = t0, st.key
+            else:
+                pairs = jax.vmap(jax.random.split)(
+                    jax.random.wrap_key_data(st.key))
+                sampled = jax.vmap(jax.random.categorical)(
+                    pairs[:, 0], logits).astype(jnp.int32)
+                dec = active & ~is_pf
+                # prefill steps consume no key: the per-request split
+                # sequence stays identical to the non-chunked engine
+                nxt = jnp.where(dec, sampled, t0)
+                key = jnp.where(dec[:, None],
+                                jax.random.key_data(pairs[:, 1]), st.key)
+            nxt = jnp.where(emitting, nxt, st.token)
+            remaining = st.remaining - emitting.astype(jnp.int32)
+            ended = remaining <= 0
+            if eos is not None:
+                ended = ended | (nxt == eos)
+            st = SlotState(
+                phase=jnp.where(finishing, PHASE_DECODE, st.phase),
+                token=nxt,
+                pos=st.pos + n_valid,
+                done=st.done | (emitting & ended),
+                remaining=remaining,
+                key=key,
+                req_id=st.req_id,
+                plen=st.plen,
+            )
+            stats = stats + jnp.stack(
+                [n_dec - n_u, n_u, drained.astype(jnp.int32), n_pf])
+            emit = jnp.where(emitting, nxt, -1)
+            return (cache, st, mon, stats), (emit, emitting)
+
+        def run(params, cache, st, mon, prompts, enabled):
+            stats0 = jnp.zeros((4,), jnp.int32)
+            (cache, st, mon, stats), (emits, ems) = lax.scan(
+                lambda cry, x: step(params, prompts, enabled, cry, x),
+                (cache, st, mon, stats0),
+                None,
+                length=cfg.segment_len,
+            )
+            if ring:
+                cache = PG.drain_ring(cache, use_kernel=cfg.drain_kernel)
+            return cache, st, mon, stats, emits, ems
+
+        return jax.jit(run)
+
     # ------------------------------------------------------------------
-    # admission / retirement (host, between segments)
+    # admission / retirement / allocation (host, between segments)
     # ------------------------------------------------------------------
     def _pages_needed(self, plen: int, max_new: int) -> int:
         # decode writes rows plen .. plen+max_new-2 (the final emitted
         # token is never consumed, so its KV is never written)
         return max(1, -(-(plen + max_new - 1) // self.cfg.page_size))
+
+    def _segment_cover_pages(self, pos: int, prefilling: bool,
+                             plen: int, max_new: int) -> int:
+        """Pages covering the worst-case rows the NEXT segment can write
+        for a slot at ``pos`` — THE per-chunk allocation formula, shared by
+        admission (`_first_pages`) and between-segment top-up
+        (`_topup_blocks`). A prefilling slot advances up to
+        ``segment_len * chunk_size`` rows (a mid-segment PREFILL→DECODE
+        flip advances strictly less), a decoding slot ``segment_len``;
+        both are capped by the footprint ``plen + max_new - 1`` (the final
+        emitted token's KV is never written)."""
+        cfg = self.cfg
+        cap = plen + max_new - 1
+        adv = cfg.segment_len * (cfg.chunk_size if prefilling else 1)
+        rows = min(pos + adv, max(cap, plen))
+        return max(1, -(-rows // cfg.page_size))
+
+    def _first_pages(self, req) -> int:
+        """Pages to allocate at admission: the whole footprint
+        (non-chunked), or only what the FIRST segment can touch
+        (per-chunk granularity)."""
+        if not self._in_scan_prefill:
+            return self._pages_needed(req.prompt_len, req.max_new)
+        return self._segment_cover_pages(0, True, req.prompt_len,
+                                         req.max_new)
+
+    def _topup_blocks(self) -> np.ndarray:
+        """Per-chunk allocation: before each segment, extend every live
+        slot's page table to cover the rows the NEXT segment can write.
+        Returns the enabled mask — a slot whose top-up fails (pool
+        exhausted) stalls for one segment instead of deadlocking."""
+        cfg = self.cfg
+        enabled = np.ones((cfg.n_slots,), bool)
+        if not self._in_scan_prefill:
+            return enabled
+        pos = np.asarray(self.slots.pos)
+        phase = np.asarray(self.slots.phase)
+        done = np.asarray(self.slots.done)
+        for s in range(cfg.n_slots):
+            if not self._occupied[s] or bool(done[s]):
+                continue
+            want = self._segment_cover_pages(
+                int(pos[s]), phase[s] == PHASE_PREFILL,
+                self._slot_plen[s], self._slot_max_new[s])
+            have = self._slot_pages[s]
+            if want > have:
+                got = self.pool.alloc(s, want - have)
+                if got is None:
+                    enabled[s] = False
+                    continue
+                self.cache["page_table"] = self.cache["page_table"].at[
+                    s, have:want].set(jnp.asarray(got))
+                self._slot_pages[s] = want
+        return enabled
 
     def _prefill(self, prompts: jnp.ndarray, max_seq: int, media):
         """Jitted batched prefill, cached per (max_seq, media?) — jit
@@ -326,6 +555,76 @@ class BatchedServeEngine:
         args = (self.params, prompts) if media is None else (
             self.params, prompts, media)
         return fn(*args)
+
+    def _chunk_prefill_host(self, prompts: jnp.ndarray, max_seq: int, media):
+        """Whole-prompt prefill done in ``chunk_size``-token pieces through
+        ``model.chunk_prefill`` (lanes layout under ``chunked=True``).
+        Bit-identical to ``model.prefill`` — exercised across every arch by
+        the config-matrix parity test. Runs eagerly: chunk boundaries are
+        static Python values (ring addressing branches on them), so a jit
+        per (chunk, start) pair would buy nothing at admission frequency."""
+        g, plen = prompts.shape
+        cache = self.model.init_cache(g, max_seq)
+        # enc-dec (Whisper): the audio encoder runs on the FIRST chunk and
+        # its cross-KV is reused from the cache on later ones; the VLM
+        # family's gated cross layers consume media on every chunk
+        media_once = hasattr(self.model, "encode")
+        logits = None
+        for s0 in range(0, plen, self.cfg.chunk_size):
+            chunk = prompts[:, s0:s0 + self.cfg.chunk_size]
+            m = None if (media_once and s0 > 0) else media
+            logits, cache = self.model.chunk_prefill(
+                self.params, cache, chunk, s0, media=m)
+        return logits, cache
+
+    def _record_first_tokens(self, rids) -> None:
+        if self._t_serve0 is None:
+            self._t_serve0 = time.perf_counter()
+        now = time.perf_counter()
+        for rid in rids:
+            self.ttft.setdefault(rid, now - self._t_serve0)
+
+    def _admit_chunked(self, slots: List[int], reqs: List[Any],
+                       blocks: List[np.ndarray]) -> None:
+        """Chunked (paged) admission: NO prefill — park the prompt in the
+        device buffer, point the page table at the first per-chunk blocks,
+        and hand the slot to the scan in PREFILL phase."""
+        cfg = self.cfg
+        slot_arr = jnp.asarray(slots, jnp.int32)
+        padded = np.zeros((len(reqs), cfg.max_seq), np.int32)
+        for i, r in enumerate(reqs):
+            padded[i, : r.prompt_len] = r.prompt
+        self.prompts = self.prompts.at[slot_arr].set(jnp.asarray(padded))
+        table = np.full((len(reqs), self.max_pages), -1, np.int32)
+        for i, b in enumerate(blocks):
+            table[i, : len(b)] = b
+        self.cache["page_table"] = self.cache["page_table"].at[
+            slot_arr].set(jnp.asarray(table))
+        keys = jax.random.key_data(jax.vmap(
+            lambda i: jax.random.fold_in(self._base_key, i)
+        )(jnp.asarray([r.req_id for r in reqs], jnp.int32)))
+        st = self.slots
+        self.slots = SlotState(
+            phase=st.phase.at[slot_arr].set(PHASE_PREFILL),
+            token=st.token.at[slot_arr].set(0),
+            pos=st.pos.at[slot_arr].set(0),
+            done=st.done.at[slot_arr].set(False),
+            remaining=st.remaining.at[slot_arr].set(
+                jnp.asarray([r.max_new for r in reqs], jnp.int32)),
+            key=st.key.at[slot_arr].set(keys),
+            req_id=st.req_id.at[slot_arr].set(
+                jnp.asarray([r.req_id for r in reqs], jnp.int32)),
+            plen=st.plen.at[slot_arr].set(
+                jnp.asarray([r.prompt_len for r in reqs], jnp.int32)),
+        )
+        for slot, req, b in zip(slots, reqs, blocks):
+            self._occupied[slot] = True
+            self._slot_req[slot] = req.req_id
+            self._slot_plen[slot] = req.prompt_len
+            self._slot_max_new[slot] = req.max_new
+            self._slot_pages[slot] = len(b)
+            self.outputs[req.req_id] = []
+        self.stats["admitted"] += len(reqs)
 
     def _admit_group(self, slots: List[int], reqs: List[Any],
                      blocks: List[Optional[np.ndarray]]) -> None:
@@ -361,7 +660,11 @@ class BatchedServeEngine:
                 jnp.asarray(padded))
             regions = np.concatenate([b[rows // ps] for b in blocks])
         else:
-            logits, pc = self._prefill(prompts, cfg.max_seq, media)
+            if self.cfg.chunked:
+                logits, pc = self._chunk_prefill_host(
+                    prompts, cfg.max_seq, media)
+            else:
+                logits, pc = self._prefill(prompts, cfg.max_seq, media)
             self.cache = jax.tree.map(
                 lambda big, small: big.at[:, slot_arr].set(small),
                 self.cache, pc,
@@ -384,6 +687,7 @@ class BatchedServeEngine:
             done0 = done0 | (t0s == cfg.eos_id)
         st = self.slots
         self.slots = SlotState(
+            phase=st.phase.at[slot_arr].set(PHASE_DECODE),
             token=st.token.at[slot_arr].set(jnp.asarray(t0s)),
             pos=st.pos.at[slot_arr].set(plen),
             done=st.done.at[slot_arr].set(jnp.asarray(done0)),
@@ -391,11 +695,16 @@ class BatchedServeEngine:
             key=st.key.at[slot_arr].set(keys),
             req_id=st.req_id.at[slot_arr].set(
                 jnp.asarray([r.req_id for r in reqs], jnp.int32)),
+            plen=st.plen.at[slot_arr].set(plen),
         )
-        for slot, req, t0 in zip(slots, reqs, t0s):
+        for slot, req, t0, b in zip(slots, reqs, t0s, blocks):
             self._occupied[slot] = True
             self._slot_req[slot] = req.req_id
+            self._slot_plen[slot] = req.prompt_len
+            self._slot_max_new[slot] = req.max_new
+            self._slot_pages[slot] = 0 if b is None else len(b)
             self.outputs[req.req_id] = [int(t0)]
+        self._record_first_tokens([r.req_id for r in reqs])
         self.stats["admitted"] += g
 
     def _retire(self, slots: List[int]) -> None:
@@ -404,22 +713,27 @@ class BatchedServeEngine:
                 self.pool.free_slot(slot)
             self._occupied[slot] = False
             self._slot_req[slot] = -1
+            self._slot_plen[slot] = 0
+            self._slot_max_new[slot] = 0
+            self._slot_pages[slot] = 0
         if self.pool is not None and slots:
             self.cache["page_table"] = self.cache["page_table"].at[
                 jnp.asarray(slots, jnp.int32)].set(-1)
         self.stats["retired"] += len(slots)
 
     def admit(self, queue: RequestQueue) -> int:
-        """Admit from the queue head into free slots (FIFO: head-of-line
-        blocks when the pool can't cover it). Same-prompt-length requests
-        admitted together share one batched prefill. Returns #admitted."""
+        """Admit waiting requests into free slots, scanning the queue in
+        submission order. A request whose blocks can't be covered RIGHT NOW
+        is skipped in favor of later ones that fit — it keeps its queue
+        position and is admitted once blocks free up (completion-order
+        fairness without head-of-line blocking). Same-prompt-length
+        requests admitted together share one batched prefill. Returns
+        #admitted."""
         picks: List[tuple] = []  # (slot, req, blocks)
-        for slot in range(self.cfg.n_slots):
-            if not queue:
-                break
-            if self._occupied[slot]:
-                continue
-            req = queue.peek()
+        free = [s for s in range(self.cfg.n_slots) if not self._occupied[s]]
+        qi = 0
+        while free and qi < len(queue):
+            req = queue.at(qi)
             if req.prompt_len + req.max_new > self.cfg.max_seq:
                 raise ValueError(
                     f"request {req.req_id}: prompt_len+max_new "
@@ -427,47 +741,84 @@ class BatchedServeEngine:
                 )
             blocks = None
             if self.pool is not None:
-                needed = self._pages_needed(req.prompt_len, req.max_new)
-                if needed > self.pool.n_blocks:
+                total = self._pages_needed(req.prompt_len, req.max_new)
+                if total > self.pool.n_blocks:
                     raise ValueError(
-                        f"request {req.req_id} needs {needed} blocks; "
+                        f"request {req.req_id} needs {total} blocks; "
                         f"pool holds {self.pool.n_blocks}")
-                blocks = self.pool.alloc(slot, needed)
+                blocks = self.pool.alloc(free[0], self._first_pages(req))
                 if blocks is None:
-                    break  # FIFO: wait for retirements, don't skip ahead
-            picks.append((slot, queue.pop(), blocks))
-        # group same-length prompts into one prefill dispatch each
-        groups: Dict[int, List[tuple]] = {}
-        for p in picks:
-            groups.setdefault(p[1].prompt_len, []).append(p)
-        for members in groups.values():
-            self._admit_group([m[0] for m in members],
-                              [m[1] for m in members],
-                              [m[2] for m in members])
+                    qi += 1  # doesn't fit now: let later requests try
+                    continue
+            picks.append((free.pop(0), queue.pop_at(qi), blocks))
+        if self._in_scan_prefill:
+            if picks:
+                self._admit_chunked([p[0] for p in picks],
+                                    [p[1] for p in picks],
+                                    [p[2] for p in picks])
+        else:
+            # group same-length prompts into one prefill dispatch each
+            groups: Dict[int, List[tuple]] = {}
+            for p in picks:
+                groups.setdefault(p[1].prompt_len, []).append(p)
+            for members in groups.values():
+                self._admit_group([m[0] for m in members],
+                                  [m[1] for m in members],
+                                  [m[2] for m in members])
         return len(picks)
 
     # ------------------------------------------------------------------
     # the serve loop
     # ------------------------------------------------------------------
-    def run_segment(self) -> np.ndarray:
+    def _mixed_phase_pending(self) -> bool:
+        """Does the NEXT segment need the mixed-phase step? Only when a
+        live slot is still prefilling — phases only flip PREFILL→DECODE
+        inside a segment, so a pure-decode start stays pure."""
+        if not self._in_scan_prefill:
+            return False
+        phase = np.asarray(self.slots.phase)
+        done = np.asarray(self.slots.done)
+        return bool(np.any(~done & (phase == PHASE_PREFILL)
+                           & np.asarray(self._occupied)))
+
+    def run_segment(self, enabled: Optional[np.ndarray] = None) -> np.ndarray:
         """One jitted scan segment + ONE host readback. Returns the bool
-        [segment_len, n_slots] activity matrix (which steps emitted)."""
-        if self._segment_fn is None:
-            self._segment_fn = self._build_segment()
-        self.cache, self.slots, self.mon_state, stats, emits, acts = (
-            self._segment_fn(self.params, self.cache, self.slots,
-                             self.mon_state))
+        [segment_len, n_slots] emission matrix (which steps emitted).
+        ``enabled`` (bool[n_slots], optional) stalls slots whose per-chunk
+        block top-up failed."""
+        if enabled is None:
+            enabled = np.ones((self.cfg.n_slots,), bool)
+        enabled_j = jnp.asarray(enabled)
+        if self._mixed_phase_pending():
+            if self._mixed_fn is None:
+                self._mixed_fn = self._build_mixed_segment()
+            self.cache, self.slots, self.mon_state, stats, emits, acts = (
+                self._mixed_fn(self.params, self.cache, self.slots,
+                               self.mon_state, self.prompts, enabled_j))
+        else:
+            if self._segment_fn is None:
+                self._segment_fn = self._build_segment()
+            self.cache, self.slots, self.mon_state, stats, emits, acts = (
+                self._segment_fn(self.params, self.cache, self.slots,
+                                 self.mon_state, enabled_j))
         emits, acts = np.asarray(emits), np.asarray(acts)
-        d, s, dr = (int(x) for x in stats)
+        d, s, dr, pf = (int(x) for x in stats)
         self.stats["direct_writes"] += d
         self.stats["staged_writes"] += s
         self.stats["drains"] += dr
+        self.stats["prefill_writes"] += pf
         self.stats["segments"] += 1
+        first = []
         for slot in range(self.cfg.n_slots):
             if self._occupied[slot]:
                 toks = emits[acts[:, slot], slot]
-                self.outputs[self._slot_req[slot]].extend(
-                    int(t) for t in toks)
+                if len(toks):
+                    rid = self._slot_req[slot]
+                    if not self.outputs[rid]:
+                        first.append(rid)
+                    self.outputs[rid].extend(int(t) for t in toks)
+        if first:
+            self._record_first_tokens(first)
         return acts
 
     def retire_done(self) -> int:
@@ -482,6 +833,8 @@ class BatchedServeEngine:
               max_segments: int = 100_000) -> Dict[int, np.ndarray]:
         """Drain the queue to completion: admit / scan a segment / collect /
         retire, until no request is live. Returns {req_id: tokens}."""
+        if self._t_serve0 is None:
+            self._t_serve0 = time.perf_counter()
         for _ in range(max_segments):
             self.retire_done()
             self.admit(queue)
@@ -495,9 +848,15 @@ class BatchedServeEngine:
                     "(request larger than pool capacity?)")
             # all-done slot arrays would make the segment a no-op: only
             # scan when at least one slot is live
-            if bool(np.all(np.asarray(self.slots.done))):
+            live = ~np.asarray(self.slots.done) & np.asarray(self._occupied)
+            if not live.any():
                 continue
-            self.run_segment()
+            enabled = self._topup_blocks()
+            if not (live & enabled).any():
+                raise RuntimeError(
+                    "every live slot stalled on block top-up: the pool is "
+                    "too small for the admitted working set")
+            self.run_segment(enabled)
         else:
             raise RuntimeError(f"serve() exceeded {max_segments} segments")
         return {rid: np.asarray(t, np.int32) for rid, t in self.outputs.items()}

@@ -33,7 +33,6 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.decision import expert_hot_mask
 from ..optim.adamw import AdamW, AdamWState

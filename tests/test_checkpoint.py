@@ -1,7 +1,5 @@
 """Checkpoint tests: atomicity, async, resume, elastic restore, pruning."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

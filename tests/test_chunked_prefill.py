@@ -1,0 +1,141 @@
+"""Chunked-prefill mixed-phase scheduling: chunking must change WHEN
+tokens appear (admission is immediate, prefill interleaves with decode),
+never WHICH — every comparison here is EXACT token equality against the
+admission-blocking engine, across write modes, chunk sizes, sampling
+modes, and retirement paths. Plus the per-phase routing split: prefill
+chunk writes are bulk/offload by decision-plane decree, decode writes
+keep their mode's routing."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import synthetic_requests
+from repro.models import build_model
+from repro.serve import BatchConfig, BatchedServeEngine
+
+N_REQ, MAX_NEW = 5, 8
+PLENS = [20, 6, 11]  # mixed long/short, ragged against every chunk size
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 64)
+    return cfg, model, params
+
+
+def _queue(cfg, plens=PLENS, max_new=MAX_NEW, n=N_REQ):
+    return synthetic_requests(n, plens, cfg.vocab, max_new, seed=3)
+
+
+def _engine(model, params, chunked, **kw):
+    kw.setdefault("segment_len", 4)
+    kw.setdefault("ring_size", 4)
+    kw.setdefault("hot_threshold", 3)
+    kw.setdefault("chunk_size", 3)
+    return BatchedServeEngine(model, params, BatchConfig(
+        max_seq=40, n_slots=2, page_size=4, chunked=chunked, **kw))
+
+
+def _assert_same(out_a, out_b):
+    assert set(out_a) == set(out_b)
+    for r in out_a:
+        np.testing.assert_array_equal(out_a[r], out_b[r])
+
+
+@pytest.mark.parametrize("mode", ["direct", "staged", "adaptive"])
+def test_chunked_equals_blocking_every_write_mode(setup, mode):
+    cfg, model, params = setup
+    out_c = _engine(model, params, True, write_mode=mode).serve(_queue(cfg))
+    out_b = _engine(model, params, False, write_mode=mode).serve(_queue(cfg))
+    _assert_same(out_c, out_b)
+    # and against sequential decode (the acceptance oracle)
+    eng1 = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=40, n_slots=1, page_size=4, segment_len=4, ring_size=4,
+        hot_threshold=3, write_mode=mode))
+    _assert_same(out_c, eng1.serve(_queue(cfg)))
+
+
+@pytest.mark.parametrize("chunk_size", [1, 3, 8])
+def test_chunk_size_is_invisible(setup, chunk_size):
+    """Any chunking of the prompt produces the same stream (including
+    chunk_size=1: pure token-at-a-time prefill)."""
+    cfg, model, params = setup
+    out_c = _engine(model, params, True,
+                    chunk_size=chunk_size).serve(_queue(cfg))
+    out_b = _engine(model, params, False).serve(_queue(cfg))
+    _assert_same(out_c, out_b)
+
+
+def test_sampled_streams_survive_chunking(setup):
+    """Prefill steps must consume no PRNG splits: the per-request sampled
+    stream is a function of the request id alone, chunked or not."""
+    cfg, model, params = setup
+    out_c = _engine(model, params, True, greedy=False).serve(_queue(cfg))
+    out_b = _engine(model, params, False, greedy=False).serve(_queue(cfg))
+    _assert_same(out_c, out_b)
+
+
+def test_eos_and_budget_retirement_through_chunked(setup):
+    cfg, model, params = setup
+    base = _engine(model, params, False).serve(_queue(cfg))
+    eos = int(base[0][3])  # a token the greedy stream emits mid-sequence
+    out_c = _engine(model, params, True, eos_id=eos).serve(_queue(cfg))
+    out_b = _engine(model, params, False, eos_id=eos).serve(_queue(cfg))
+    _assert_same(out_c, out_b)
+    assert len(out_c[0]) <= 4 and out_c[0][-1] == eos
+
+
+def test_max_new_one_emits_in_scan(setup):
+    """max_new=1: the only emitted token is the prefill flip's argmax —
+    the slot retires without a single decode write."""
+    cfg, model, params = setup
+    eng = _engine(model, params, True)
+    out = eng.serve(_queue(cfg, max_new=1))
+    _assert_same(out, _engine(model, params, False).serve(
+        _queue(cfg, max_new=1)))
+    assert all(out[r].shape == (1,) for r in out)
+    assert eng.stats["direct_writes"] == 0
+    assert eng.stats["prefill_writes"] == sum(
+        PLENS[i % len(PLENS)] for i in range(N_REQ))
+
+
+def test_per_phase_write_split(setup):
+    """Decode writes tally direct/staged by routing; prefill chunk rows
+    tally separately (the bulk/offload path) — phase-tagged WriteBatch."""
+    cfg, model, params = setup
+    eng = _engine(model, params, True, write_mode="staged")
+    eng.serve(_queue(cfg))
+    n_prompt = sum(PLENS[i % len(PLENS)] for i in range(N_REQ))
+    assert eng.stats["prefill_writes"] == n_prompt
+    # staged mode stages every SCATTERED write; bulk prefill never stages
+    assert eng.stats["staged_writes"] == N_REQ * (MAX_NEW - 1)
+    assert eng.stats["direct_writes"] == 0
+
+
+def test_ttft_is_recorded_for_every_request(setup):
+    cfg, model, params = setup
+    for chunked in (False, True):
+        eng = _engine(model, params, chunked)
+        out = eng.serve(_queue(cfg))
+        assert set(eng.ttft) == set(out)
+        assert all(t >= 0.0 for t in eng.ttft.values())
+
+
+def test_lanes_layout_chunk_prefills_at_admission(setup):
+    """SWA serves from lanes: chunked=True runs model.chunk_prefill at
+    admission — same outputs as whole-prompt prefill."""
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 32)
+    mk = lambda: synthetic_requests(  # noqa: E731
+        3, [11, 5], cfg.vocab, 5, seed=7)
+    out_c = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=32, n_slots=2, segment_len=2, page_size=4,
+        chunked=True, chunk_size=4)).serve(mk())
+    eng = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=32, n_slots=2, segment_len=2, page_size=4))
+    assert eng.layout == "lanes"
+    _assert_same(out_c, eng.serve(mk()))

@@ -4,7 +4,6 @@ actually carry), and vs ``ExactMonitor`` where the sketch is collision-free
 by construction. Plus the colliding-ids property: the kernel's one-hot
 histogram accumulates EVERY duplicate (a serialized scatter-add would too —
 a racy one would lose increments)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

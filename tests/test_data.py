@@ -1,8 +1,37 @@
-"""Data pipeline tests: determinism, host sharding, restart, memmap."""
+"""Data pipeline tests: determinism, host sharding, restart, memmap,
+request-queue ordering."""
 import numpy as np
-import pytest
 
-from repro.data import DataConfig, MemmapSource, Pipeline, SyntheticSource
+from repro.data import (
+    DataConfig,
+    MemmapSource,
+    Pipeline,
+    RequestQueue,
+    SyntheticSource,
+    synthetic_requests,
+)
+
+
+def test_request_queue_pop_at_preserves_relative_order():
+    q = RequestQueue()
+    for _ in range(5):
+        q.submit(np.arange(4, dtype=np.int32), 2)
+    assert q.pop_at(2).req_id == 2          # skip-ahead admission
+    assert [q.at(i).req_id for i in range(len(q))] == [0, 1, 3, 4]
+    assert q.pop_at(0).req_id == 0          # head pop still works
+    assert q.pop().req_id == 1
+    assert [q.at(i).req_id for i in range(len(q))] == [3, 4]
+
+
+def test_synthetic_requests_mixed_prompt_lengths():
+    q = synthetic_requests(5, [12, 4], vocab=97, max_new=3, seed=1)
+    lens = [q.at(i).prompt_len for i in range(len(q))]
+    assert lens == [12, 4, 12, 4, 12]
+    # request i's prompt is a function of (seed, i) alone: the same
+    # request appears bit-identically in a uniform-length stream
+    q_uniform = synthetic_requests(5, 12, vocab=97, max_new=3, seed=1)
+    np.testing.assert_array_equal(q.at(0).prompt, q_uniform.at(0).prompt)
+    np.testing.assert_array_equal(q.at(2).prompt, q_uniform.at(2).prompt)
 
 
 def test_synthetic_deterministic_per_step():
@@ -37,7 +66,7 @@ def test_pipeline_prefetch_and_skip(tmp_path):
     src = SyntheticSource(cfg)
     pipe = Pipeline(src).start()
     b0 = next(pipe)
-    b1 = next(pipe)
+    next(pipe)
     pipe.skip_to(10)
     b10 = next(pipe)
     pipe.stop()

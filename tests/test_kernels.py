@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs ref.py
 oracles, across shapes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """Monitor unit + property tests (paper §3.2)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

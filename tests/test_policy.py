@@ -1,7 +1,5 @@
 """Policy + decision-module tests (paper §3.2)."""
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.decision import DecisionModule, expert_hot_mask
 from repro.core.monitor import ExactMonitor

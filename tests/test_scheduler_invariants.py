@@ -76,13 +76,138 @@ def _setup(n_slots=2, n_blocks=0, max_new=6, n_req=5, mode="adaptive"):
 
 
 def test_admission_preserves_fifo_order():
-    """Admission order == submission order, even when the pool is too
-    small to admit every waiting request (head-of-line blocking, never
-    skip-ahead) — and dict insertion order records the admission order."""
+    """Admission order == submission order for a uniform workload, even
+    when the pool is too small to admit every waiting request: skip-ahead
+    only reorders when a LATER request needs strictly fewer blocks than a
+    blocked earlier one, so same-size streams stay strictly FIFO — and
+    dict insertion order records the admission order."""
     for n_blocks in (0, 7):  # ample pool / pool forcing waits (3 pages/req)
         eng, queue = _setup(n_slots=4, n_blocks=n_blocks, n_req=6)
         out = eng.serve(queue)
         assert list(out) == list(range(6))
+
+
+def test_admission_skips_blocked_head_to_smaller_request():
+    """Head-of-line fix: a request the pool can't cover RIGHT NOW is
+    skipped in favor of a later one that fits; it keeps its queue position
+    and completes once blocks free up."""
+    from repro.data import RequestQueue
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 32)
+    eng = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=32, n_slots=2, segment_len=3, page_size=4, n_blocks=5))
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab
+    q = RequestQueue()
+    q.submit(prompt, 1)   # req 0: 2 pages
+    q.submit(prompt, 9)   # req 1: 4 pages — blocked after req 0 takes 2
+    q.submit(prompt, 1)   # req 2: 2 pages — fits, overtakes req 1
+    eng.admit(q)
+    assert eng._slot_req == [0, 2]   # req 1 skipped, not dropped
+    assert len(q) == 1 and q.peek().req_id == 1
+    out = eng.serve(q)               # req 1 admitted after retirements
+    assert set(out) == {0, 1, 2}
+    assert len(out[1]) == 9
+
+
+def _chunked_setup(plens, max_new, n_req, n_blocks=0, chunk_size=3,
+                   segment_len=2, n_slots=2):
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 40)
+    queue = synthetic_requests(n_req, plens, cfg.vocab, max_new, seed=2)
+    eng = BatchedServeEngine(model, params, BatchConfig(
+        max_seq=40, n_slots=n_slots, segment_len=segment_len, page_size=4,
+        n_blocks=n_blocks, chunked=True, chunk_size=chunk_size))
+    return eng, queue
+
+
+def test_chunked_phase_transitions_and_cursor_invariants():
+    """A slot never decodes (= never emits) before its chunk cursor passes
+    plen; the cursor never overshoots plen mid-prefill; decode positions
+    start at plen."""
+    eng, queue = _chunked_setup(plens=[13, 4], max_new=4, n_req=4)
+    from repro.serve.scheduler import PHASE_DECODE, PHASE_PREFILL
+
+    for _ in range(200):
+        eng.retire_done()
+        eng.admit(queue)
+        if not any(eng._occupied):
+            break
+        enabled = eng._topup_blocks()
+        eng.run_segment(enabled)
+        pos = np.asarray(eng.slots.pos)
+        phase = np.asarray(eng.slots.phase)
+        for s in range(eng.cfg.n_slots):
+            if not eng._occupied[s]:
+                continue
+            plen = eng._slot_plen[s]
+            rid = eng._slot_req[s]
+            if phase[s] == PHASE_PREFILL:
+                assert pos[s] <= plen
+                assert len(eng.outputs[rid]) == 0  # no decode before flip
+            else:
+                assert phase[s] == PHASE_DECODE and pos[s] >= plen
+            assert len(eng.outputs[rid]) <= eng._slot_max_new[s]
+    else:
+        raise AssertionError("did not drain")
+    assert all(len(t) == 4 for t in eng.outputs.values())
+
+
+def test_per_chunk_alloc_grows_incrementally_and_never_overlaps():
+    """Per-chunk granularity: admission reserves only the first segment's
+    pages (a long prompt does NOT pin its whole footprint), top-ups grow
+    the page table monotonically, and block ownership stays disjoint."""
+    eng, queue = _chunked_setup(plens=[24], max_new=9, n_req=3,
+                                chunk_size=2, segment_len=2)
+    full = eng._pages_needed(24, 9)          # whole-footprint pages
+    eng.admit(queue)
+    slot0_pages = eng._slot_pages[0]
+    assert 0 < slot0_pages < full            # incremental, not up-front
+    seen_pages = {}  # (slot, req) -> page count, monotone per request
+    for _ in range(200):
+        eng.retire_done()
+        eng.admit(queue)
+        if not any(eng._occupied):
+            break
+        enabled = eng._topup_blocks()
+        # ownership audit: page tables of occupied slots reference
+        # disjoint, owned blocks (per-chunk allocs never overlap)
+        table = np.asarray(eng.cache["page_table"])
+        seen = set()
+        for s in range(eng.cfg.n_slots):
+            blocks = [b for b in table[s] if b >= 0]
+            if not eng._occupied[s]:
+                assert not blocks
+                continue
+            key = (s, eng._slot_req[s])
+            assert eng._slot_pages[s] >= seen_pages.get(key, 0)  # monotone
+            seen_pages[key] = eng._slot_pages[s]
+            for b in blocks:
+                assert b not in seen
+                seen.add(b)
+                assert eng.pool.owner[b] == s
+        eng.run_segment(enabled)
+    else:
+        raise AssertionError("did not drain")
+    assert all(len(t) == 9 for t in eng.outputs.values())
+
+
+def test_chunked_stalls_instead_of_deadlocking_on_a_tight_pool():
+    """A slot whose top-up fails is stalled for the segment (enabled mask)
+    and resumes once blocks free; the stream still completes, bit-equal to
+    an ample-pool run."""
+    ample, q1 = _chunked_setup(plens=[16, 8], max_new=6, n_req=4)
+    out_ref = ample.serve(q1)
+    # peak concurrent demand is 6+4=10 pages; 9 forces top-up stalls while
+    # any single request (<=6) still fits, so the stream must complete
+    tight, q2 = _chunked_setup(plens=[16, 8], max_new=6, n_req=4,
+                               n_blocks=9)
+    out = tight.serve(q2)
+    assert set(out) == set(out_ref)
+    for r in out:
+        np.testing.assert_array_equal(out[r], out_ref[r])
 
 
 def test_live_slots_never_share_blocks_and_tables_match_owner():

@@ -2,7 +2,6 @@
 per-step Python reference loop (tokens AND telemetry) in every write mode,
 and must not host-sync per step."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,7 +4,6 @@ attention schemes must match the divisibility table in DESIGN.md."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config, get_shape
 from repro.distributed.sharding import (

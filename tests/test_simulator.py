@@ -2,7 +2,6 @@
 paper's own claims (§4, FIG3_CLAIMS) using the REAL policy code."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import FIG3_CLAIMS
 from repro.core.monitor import ExactMonitor

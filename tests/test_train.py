@@ -1,6 +1,5 @@
 """Training integration: loss descent, grad accumulation equivalence,
 checkpoint resume, fault retry, straggler detection, MoE monitor flow."""
-import logging
 import tempfile
 
 import jax
