@@ -35,10 +35,14 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config
 from repro.data import synthetic_requests
-from repro.models import build_model
-from repro.serve import BatchConfig, BatchedServeEngine, ServeConfig, ServeEngine
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    ServeConfig,
+    ServeEngine,
+    build_model_and_params,
+)
 
 
 def _time_generate(eng, prompt, n, reference):
@@ -90,18 +94,16 @@ def bench_batched(
 ) -> dict:
     """Continuous batching vs sequential per-request decode (same model,
     same requests, same paged substrate — only the slot count differs)."""
-    cfg = get_config(arch).reduced()
-    model = build_model(cfg)
     max_seq = prompt_len + max_new + 8
-    params = model.init(jax.random.key(0), max_seq)
+    cfg, model, params = build_model_and_params(arch, max_seq)
     mk_queue = lambda: synthetic_requests(  # noqa: E731
         n_requests, prompt_len, cfg.vocab, max_new, seed=11)
 
     def mk_engine(slots):
-        return BatchedServeEngine(model, params, BatchConfig(
+        return Engine.from_config(EngineConfig(
             max_seq=max_seq, n_slots=slots, segment_len=segment_len,
-            write_mode=write_mode, page_size=8,
-        ))
+            path=write_mode, page_size=8,
+        ), model, params)
 
     out_b, tps_b, _ = _serve_timed(mk_engine(n_slots), mk_queue)
     out_s, tps_s, _ = _serve_timed(mk_engine(1), mk_queue)
@@ -168,19 +170,17 @@ def bench_chunked(
     stalls on; 6 admission waves over 4 slots make the stall recurrent).
     Sequential decode (one slot, blocking) is the bit-parity oracle:
     chunking must change WHEN tokens appear, never WHICH."""
-    cfg = get_config(arch).reduced()
-    model = build_model(cfg)
     max_seq = long_prompt + max_new + 8
-    params = model.init(jax.random.key(0), max_seq)
+    cfg, model, params = build_model_and_params(arch, max_seq)
     plens = [long_prompt] + [short_prompt] * 3
     mk_queue = lambda: synthetic_requests(  # noqa: E731
         n_requests, plens, cfg.vocab, max_new, seed=11)
 
     def mk_engine(slots, chunked):
-        return BatchedServeEngine(model, params, BatchConfig(
+        return Engine.from_config(EngineConfig(
             max_seq=max_seq, n_slots=slots, segment_len=segment_len,
             page_size=8, chunked=chunked, chunk_size=chunk_size,
-        ))
+        ), model, params)
 
     (out_c, tps_c, ttft_c), (out_b, tps_b, ttft_b) = _serve_timed_paired(
         mk_engine(n_slots, True), mk_engine(n_slots, False), mk_queue)
@@ -211,17 +211,19 @@ def bench_chunked(
 
 
 def run() -> list:
-    cfg = get_config("h2o-danube-3-4b").reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0), 96)
+    cfg, model, params = build_model_and_params("h2o-danube-3-4b", 96)
     prompt = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab)
     rows = []
     for mode in ("direct", "staged", "adaptive"):
         def fresh():
+            # the dense per-request engine IS the thing measured here
+            # (jitted scan vs the seed's per-step reference loop), so it
+            # is constructed directly; _warn=False keeps the deprecation
+            # shim quiet in benchmark output
             return ServeEngine(model, params, ServeConfig(
                 max_seq=96, write_mode=mode, ring_size=8, page_size=8,
                 hot_threshold=12,
-            ))
+            ), _warn=False)
 
         eng = fresh()
         dt = _time_generate(eng, prompt, 24, reference=False)

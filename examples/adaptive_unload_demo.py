@@ -12,19 +12,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sweep_point
-from repro.core.policy import AlwaysOffload, AlwaysUnload, HintPolicy
+from repro.core.policy import get_policy_factory
 
 N, WARM = 50_000, 5_000
 TOP_K = 4096
+
+# policies resolved from the registry — the same names engine configs use
+offload_policy = get_policy_factory("always-offload")()
+unload_policy = get_policy_factory("always-unload")()
 
 print(f"{'regions':>10s} {'offload':>9s} {'unload':>9s} {'adaptive':>9s}  winner")
 for log2r in (0, 6, 12, 14, 17, 20):
     r = 2 ** log2r
     key = jax.random.key(r)
-    off, _ = sweep_point(key, r, N, WARM, AlwaysOffload())
-    un, _ = sweep_point(key, r, N, WARM, AlwaysUnload())
+    off, _ = sweep_point(key, r, N, WARM, offload_policy)
+    un, _ = sweep_point(key, r, N, WARM, unload_policy)
     hot = jnp.zeros((r,), bool).at[: min(TOP_K, r)].set(True)
-    ad, res = sweep_point(key, r, N, WARM, HintPolicy(hot_regions=hot))
+    ad, res = sweep_point(key, r, N, WARM,
+                          get_policy_factory("hint")(hot_regions=hot))
     frac_unloaded = float(res.n_unloaded) / (float(res.n_offloaded) + float(res.n_unloaded))
     winner = "adaptive" if ad <= min(off, un) else ("offload" if off < un else "unload")
     print(f"{f'2^{log2r}':>10s} {off:8.2f}µ {un:8.2f}µ {ad:8.2f}µ  {winner}"
@@ -32,6 +37,6 @@ for log2r in (0, 6, 12, 14, 17, 20):
 
 r = 2 ** 20
 key = jax.random.key(1)
-off, _ = sweep_point(key, r, N, WARM, AlwaysOffload())
-un, _ = sweep_point(key, r, N, WARM, AlwaysUnload())
+off, _ = sweep_point(key, r, N, WARM, offload_policy)
+un, _ = sweep_point(key, r, N, WARM, unload_policy)
 print(f"\nimprovement at 2^20 regions: {1 - un / off:.1%} (paper: up to 31%)")

@@ -14,8 +14,6 @@ import numpy as np
 
 from repro.core import (
     DecisionModule,
-    ExactMonitor,
-    FrequencyPolicy,
     RemoteWriteEngine,
     make_umtt,
     make_write_batch,
@@ -27,11 +25,11 @@ R, W, BATCH, STEPS = 256, 32, 64, 40
 # -- setup: register [0, R) under stag 7 (paper: registration at setup time)
 table = register(make_umtt(64), base=0, n_regions=R, stag=7)
 
-monitor = ExactMonitor(n_regions=R)
+# decision plane from registry names: the 'adaptive' write path paired
+# with the paper's frequency policy over exact heavy-hitter counters
 engine = RemoteWriteEngine(
-    decision=DecisionModule(
-        policy=FrequencyPolicy(monitor=monitor, threshold=4), monitor=monitor
-    ),
+    decision=DecisionModule.from_names(
+        "frequency", path="adaptive", n_regions=R, hot_threshold=4),
     ring_capacity=256,
     width=W,
 )

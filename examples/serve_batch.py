@@ -1,45 +1,48 @@
-"""Batched serving with uRDMA KV-write routing.
+"""Batched serving with uRDMA KV-write routing, through the Engine facade.
 
-Prefills a batch of prompts, then decodes with each of the three write
-modes — direct (offload), staged (unload: ring + bulk drain), adaptive
-(page-frequency policy) — verifying all three emit IDENTICAL tokens
-(path choice is invisible to the application: paper Idea 3).
+Serves the same 8 prompts under each registered write path — direct
+(offload), staged (unload: ring + bulk drain), adaptive (page-frequency
+policy) — and verifies all three produce IDENTICAL token streams (path
+choice is invisible to the application: paper Idea 3). Each Completion
+carries its own telemetry: TTFT and how its KV writes were routed.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.models import build_model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import Engine, EngineConfig, SamplingParams, build_model_and_params
 
 
 def main() -> None:
-    cfg = get_config("qwen2-7b").reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0), 128)
-    prompts = jax.random.randint(jax.random.key(1), (8, 24), 0, cfg.vocab)
+    max_seq = 128
+    cfg, model, params = build_model_and_params("qwen2-7b", max_seq)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab, size=24) for _ in range(8)]
 
     outs = {}
-    for mode in ("direct", "staged", "adaptive"):
-        # hot_threshold is counted over per-sequence page writes: with B=8
-        # sequences hitting the same page each step, a fresh page needs
-        # threshold/B steps to turn hot — 24 keeps new pages cold (staged)
-        # for a few steps before the frequency policy flips them to direct
-        eng = ServeEngine(model, params, ServeConfig(
-            max_seq=128, write_mode=mode, ring_size=8, page_size=16,
-            hot_threshold=24,
-        ))
-        outs[mode] = eng.generate(prompts, 32)
-        s = eng.stats
-        print(f"{mode:9s} tokens={outs[mode].shape} "
-              f"direct={s['direct_writes']} staged={s['staged_writes']} "
-              f"drains={s['drains']}")
+    for path in ("direct", "staged", "adaptive"):
+        # hot_threshold is counted over physical pool blocks: prefill
+        # heats each prompt's blocks past 12 at admission, while a block
+        # a slot decodes into starts cold (staged) and flips to the
+        # direct path after a dozen writes land in it
+        eng = Engine.from_config(EngineConfig(
+            max_seq=max_seq, n_slots=8, path=path, ring_size=8,
+            page_size=16, hot_threshold=12,
+        ), model, params)
+        comps = eng.generate(prompts, SamplingParams(max_tokens=32))
+        outs[path] = [c.tokens for c in comps]
+        routed = {k: sum(c.path_counts[k] for c in comps)
+                  for k in ("direct", "staged", "prefill")}
+        print(f"{path:9s} tokens={sum(c.n_tokens for c in comps)} "
+              f"routed={routed} drains={eng.stats['drains']} "
+              f"ttft_max={max(c.ttft_s for c in comps) * 1e3:.1f}ms")
 
-    same_sd = bool(jnp.all(outs["direct"] == outs["staged"]))
-    same_da = bool(jnp.all(outs["direct"] == outs["adaptive"]))
-    print(f"identical tokens across write paths: staged={same_sd} adaptive={same_da}")
+    same_sd = all(np.array_equal(a, b)
+                  for a, b in zip(outs["direct"], outs["staged"]))
+    same_da = all(np.array_equal(a, b)
+                  for a, b in zip(outs["direct"], outs["adaptive"]))
+    print(f"identical tokens across write paths: staged={same_sd} "
+          f"adaptive={same_da}")
     assert same_sd and same_da
 
 

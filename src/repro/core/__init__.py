@@ -8,16 +8,29 @@ Pieces (paper section in brackets):
   umtt         software registration map (security parity) [§3.1]
   unload       staging ring buffer + validated drain [§3.1]
   staged_write RemoteWriteEngine — the bidirectional write API [§3]
+  paths        WritePath registry + capability negotiation [§3]
   simulator    calibrated MTT/PCIe latency model -> Fig. 3 repro [§4]
 """
 from .decision import DecisionModule, expert_hot_mask, page_threshold
 from .monitor import CMSMonitor, ExactMonitor, MonitorState, calibrate_threshold
+from .paths import (
+    WritePath,
+    available_paths,
+    build_decision,
+    get_path,
+    negotiate,
+    register_path,
+)
 from .policy import (
     AlwaysOffload,
     AlwaysUnload,
     FrequencyPolicy,
     HintPolicy,
     HysteresisPolicy,
+    RoutingPolicy,
+    available_policies,
+    get_policy_factory,
+    register_policy,
     top_k_hot_table,
 )
 from .simulator import RDMASimulator, SimResult, sweep_point, zipf_regions
@@ -39,7 +52,10 @@ __all__ = [
     "DecisionModule", "expert_hot_mask", "page_threshold",
     "CMSMonitor", "ExactMonitor", "MonitorState", "calibrate_threshold",
     "AlwaysOffload", "AlwaysUnload", "FrequencyPolicy", "HintPolicy",
-    "HysteresisPolicy", "top_k_hot_table",
+    "HysteresisPolicy", "RoutingPolicy", "top_k_hot_table",
+    "register_policy", "get_policy_factory", "available_policies",
+    "WritePath", "register_path", "get_path", "available_paths",
+    "negotiate", "build_decision",
     "RDMASimulator", "SimResult", "sweep_point", "zipf_regions",
     "EngineState", "RemoteWriteEngine",
     "OFFLOAD", "UNLOAD", "CPUTLBConfig", "DecisionStats", "LatencyModel",

@@ -9,6 +9,7 @@ update + one compare per request, fully vectorized over the batch.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -29,14 +30,36 @@ class DecisionModule:
     threshold".
     """
 
-    policy: object  # any of repro.core.policy.*
+    policy: object  # any RoutingPolicy (repro.core.policy registry)
     monitor: Optional[object] = None  # ExactMonitor | CMSMonitor
 
-    def init_state(self):
+    @classmethod
+    def from_names(cls, policy: Optional[str] = None, path: str = "direct",
+                   *, n_regions: int, hot_threshold: int = 4,
+                   **policy_kw) -> "DecisionModule":
+        """Registry-driven construction: resolve ``(policy, path)`` name
+        strings, negotiate capabilities, return the module. The resolved
+        :class:`~repro.core.paths.WritePath` is discarded here — engines
+        that also need the path mechanics call
+        ``repro.core.paths.build_decision`` directly."""
+        from .paths import build_decision  # local: paths imports decision
+
+        _, module = build_decision(path, policy, n_regions=n_regions,
+                                   hot_threshold=hot_threshold, **policy_kw)
+        return module
+
+    def _policy_owns_state(self) -> bool:
         # STATEFUL policies (e.g. HysteresisPolicy) own their full routing
         # state — monitor counters plus decision memory — behind
         # init_state()/route(); the module just threads it through.
-        if hasattr(self.policy, "route"):
+        # Decide-style policies leave counter custody to the module.
+        # Third-party policies without a decide() are treated as owning
+        # their state (the RoutingPolicy protocol's init_state/route).
+        return getattr(self.policy, "owns_state",
+                       not hasattr(self.policy, "decide"))
+
+    def init_state(self):
+        if self._policy_owns_state():
             if self.monitor is not None:
                 raise ValueError(
                     "stateful policies own their monitor: pass monitor=None "
@@ -46,6 +69,8 @@ class DecisionModule:
             return self.policy.init_state()
         if self.monitor is not None:
             return self.monitor.init()
+        if hasattr(self.policy, "init_state"):
+            return self.policy.init_state()
         return None
 
     def __call__(
@@ -68,11 +93,21 @@ class DecisionModule:
         record their own verdict; the override is applied to the emitted
         mask, not their memory — bulk writes land on fresh regions whose
         band the next scattered write re-decides anyway.)"""
-        if hasattr(self.policy, "route"):
+        if self._policy_owns_state():
+            unload, state = self.policy.route(state, batch, mask=active)
+        elif self.monitor is not None:
+            # decide-style policy with module-owned counters
+            state = self.monitor.update(state, batch.region, mask=active)
+            unload = self.policy.decide(state, batch)
+            if active is not None:
+                unload = unload & active
+        elif hasattr(self.policy, "route"):
+            # no module monitor: the RoutingPolicy adapter keeps custody
+            # of whatever monitor the policy itself carries
             unload, state = self.policy.route(state, batch, mask=active)
         else:
-            if self.monitor is not None:
-                state = self.monitor.update(state, batch.region, mask=active)
+            # bare decide-only policy, fully stateless (legal: the
+            # pre-registry extension pattern)
             unload = self.policy.decide(state, batch)
             if active is not None:
                 unload = unload & active
@@ -80,6 +115,26 @@ class DecisionModule:
             unload = unload & (batch.phase != PHASE_BULK)
         return unload, state, DecisionStats.from_mask(unload, active,
                                                       batch.phase)
+
+    def heat(self, state, regions):
+        """Off-critical-path monitor heating for bulk writes that bypass
+        per-write routing (admission-time prefills): the frequency
+        counters must still see every write that lands in a region.
+        State-owning policies absorb it via their ``heat(state,
+        regions)`` method (HysteresisPolicy implements it); one that
+        lacks the method is warned about, since its counters will miss
+        all bulk traffic."""
+        regions = jnp.asarray(regions, jnp.int32)
+        if self.monitor is not None and not self._policy_owns_state():
+            return self.monitor.update(state, regions)
+        heat = getattr(self.policy, "heat", None)
+        if heat is not None:
+            return heat(state, regions)
+        warnings.warn(
+            f"{type(self.policy).__name__} owns its routing state but "
+            f"implements no heat(state, regions): bulk prefill writes "
+            f"will not warm its counters", stacklevel=2)
+        return state
 
 
 def expert_hot_mask(expert_load: jnp.ndarray, offload_top_k: int) -> jnp.ndarray:

@@ -1,0 +1,222 @@
+"""Write-path registry: the paper's two-path contract as a pluggable API.
+
+The paper's core requirement is that the offload (direct RDMA scatter)
+and unload (staging ring + local copy) paths stay *interchangeable and
+compatible* behind one decision plane. This module formalizes that
+contract: a :class:`WritePath` declares, by name, HOW writes reach memory
+(``uses_ring``: straight scatter vs staging-ring overlay with bulk
+drains) and WHICH routing decisions it can absorb (``capabilities``), and
+engines are configured from ``(path="adaptive", policy="hysteresis")``
+strings resolved through the registry — so a new backend is a
+registration, not an engine fork.
+
+Capabilities
+------------
+``direct``    the path can land a scattered write straight at its final
+              destination (the offload/RNIC path).
+``staged``    the path can absorb a write into the staging ring and drain
+              it later (the unload path; implies drain machinery).
+``bulk-pin``  bulk/contiguous (prefill-phase) writes can be pinned to the
+              direct path even while scattered traffic stages — required
+              for chunked prefill, where the decision plane tags
+              PHASE_BULK writes.
+
+Negotiation (:func:`negotiate`) errors loudly on incompatible combos:
+a policy that may emit "unload" needs a ``staged``-capable path, a policy
+that may emit "offload" needs ``direct`` support (``bulk-pin`` covers
+only phase-tagged bulk writes), the dense-lane KV layout only takes
+pure-direct paths, and chunked prefill needs ``bulk-pin``.
+
+Built-ins mirror the legacy ``write_mode`` strings: ``direct`` /
+``staged`` / ``adaptive`` — old configs keep meaning the same thing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+from .decision import DecisionModule
+from .monitor import ExactMonitor
+from .policy import get_policy_factory
+
+CAP_DIRECT = "direct"
+CAP_STAGED = "staged"
+CAP_BULK_PIN = "bulk-pin"
+_KNOWN_CAPS = frozenset({CAP_DIRECT, CAP_STAGED, CAP_BULK_PIN})
+
+
+@dataclasses.dataclass(frozen=True)
+class WritePath:
+    """A named KV/memory write mechanism and its negotiation surface.
+
+    name            registry key (and the engine config string).
+    capabilities    subset of {direct, staged, bulk-pin} — the decisions
+                    this path can absorb.
+    uses_ring       True = writes may ride the staging-ring overlay and
+                    the engine must run drain machinery (full-ring,
+                    conflict-forced, and segment-boundary drains).
+    default_policy  RoutingPolicy name paired with this path when the
+                    caller names no policy.
+    description     one-liner for error messages / docs.
+    """
+
+    name: str
+    capabilities: frozenset
+    uses_ring: bool
+    default_policy: str
+    description: str = ""
+
+    def __post_init__(self):
+        unknown = set(self.capabilities) - _KNOWN_CAPS
+        if unknown:
+            raise ValueError(
+                f"write path {self.name!r}: unknown capabilities "
+                f"{sorted(unknown)} (known: {sorted(_KNOWN_CAPS)})")
+        if CAP_STAGED in self.capabilities and not self.uses_ring:
+            raise ValueError(
+                f"write path {self.name!r}: the 'staged' capability "
+                f"requires uses_ring=True (staged writes need the ring "
+                f"overlay + drain machinery)")
+
+    def supports(self, cap: str) -> bool:
+        return cap in self.capabilities
+
+    def __repr__(self) -> str:
+        # deterministic (sorted) capability order: this repr lands in
+        # error messages and the committed public-API snapshot
+        caps = ", ".join(sorted(self.capabilities))
+        return (f"WritePath(name={self.name!r}, capabilities={{{caps}}}, "
+                f"uses_ring={self.uses_ring}, "
+                f"default_policy={self.default_policy!r})")
+
+
+_PATHS: Dict[str, WritePath] = {}
+
+
+def register_path(path: WritePath, *, overwrite: bool = False) -> WritePath:
+    """Register a write path by its name. Third-party paths registered
+    here are constructible from ``path="..."`` strings in every engine
+    config (the registry IS the extension point)."""
+    if path.name in _PATHS and not overwrite:
+        raise ValueError(
+            f"write path {path.name!r} already registered "
+            f"(pass overwrite=True to replace it)")
+    _PATHS[path.name] = path
+    return path
+
+
+def get_path(name: Union[str, WritePath]) -> WritePath:
+    if isinstance(name, WritePath):
+        return name
+    try:
+        return _PATHS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown write path {name!r}; registered paths: "
+            f"{sorted(_PATHS)}") from None
+
+
+def available_paths() -> Tuple[str, ...]:
+    return tuple(sorted(_PATHS))
+
+
+DIRECT = register_path(WritePath(
+    name="direct",
+    capabilities=frozenset({CAP_DIRECT, CAP_BULK_PIN}),
+    uses_ring=False,
+    default_policy="always-offload",
+    description="per-write scatter straight to the destination "
+                "(the offload/RNIC path)",
+))
+
+STAGED = register_path(WritePath(
+    name="staged",
+    capabilities=frozenset({CAP_STAGED, CAP_BULK_PIN}),
+    uses_ring=True,
+    default_policy="always-unload",
+    description="staging-ring append + bulk drain for every scattered "
+                "write (the unload path)",
+))
+
+ADAPTIVE = register_path(WritePath(
+    name="adaptive",
+    capabilities=frozenset({CAP_DIRECT, CAP_STAGED, CAP_BULK_PIN}),
+    uses_ring=True,
+    default_policy="frequency",
+    description="per-write routing between direct scatter and the "
+                "staging ring (the paper's composite)",
+))
+
+
+def negotiate(path: WritePath, policy, *, layout: Optional[str] = None,
+              chunked: bool = False) -> None:
+    """Validate a (path, policy, layout, scheduling) combination.
+
+    Raises ``ValueError`` with the full incompatibility story — which
+    capability is missing and what would need to change — instead of
+    letting an unsupported combination mis-route writes at runtime.
+    """
+    emits = getattr(policy, "emits", frozenset({"offload", "unload"}))
+    pname = getattr(policy, "name", type(policy).__name__)
+    if "unload" in emits and not path.supports(CAP_STAGED):
+        raise ValueError(
+            f"policy {pname} can route writes to the unload path, but "
+            f"write path {path.name!r} lacks the 'staged' capability "
+            f"(capabilities: {sorted(path.capabilities)}); pick a "
+            f"staged-capable path or an offload-only policy")
+    if "offload" in emits and not path.supports(CAP_DIRECT):
+        raise ValueError(
+            f"policy {pname} can keep scattered writes on the offload "
+            f"path, but write path {path.name!r} lacks the 'direct' "
+            f"capability (capabilities: {sorted(path.capabilities)}; "
+            f"'bulk-pin' covers only phase-tagged bulk writes); pick a "
+            f"direct-capable path or an unload-only policy")
+    if layout == "lanes" and path.supports(CAP_STAGED):
+        raise ValueError(
+            f"kv_layout='lanes' is direct-only (per-slot cache lanes "
+            f"have no ring overlay), but write path {path.name!r} "
+            f"carries the 'staged' capability; use path='direct' or the "
+            f"paged layout")
+    if chunked and not path.supports(CAP_BULK_PIN):
+        raise ValueError(
+            f"chunked prefill tags bulk writes for offload-path pinning, "
+            f"but write path {path.name!r} lacks the 'bulk-pin' "
+            f"capability (capabilities: {sorted(path.capabilities)})")
+
+
+def build_decision(path: Union[str, WritePath] = "direct",
+                   policy: Optional[str] = None, *,
+                   n_regions: int,
+                   hot_threshold: int = 4,
+                   layout: Optional[str] = None,
+                   chunked: bool = False,
+                   **policy_kw) -> Tuple[WritePath, DecisionModule]:
+    """The one (path, policy) -> decision-plane factory.
+
+    Resolves both names through their registries, negotiates capabilities
+    (loud errors on incompatible combos), and assembles the
+    :class:`DecisionModule`: policies that own their routing state
+    (``owns_state``) keep their monitor to themselves; decide-style
+    policies share the module-level monitor so every write heats the
+    same counters the engine reads for telemetry.
+    """
+    wp = get_path(path)
+    pol_name = policy or wp.default_policy
+    factory = get_policy_factory(pol_name)
+    monitor = ExactMonitor(n_regions=n_regions)
+    pol = factory(monitor=monitor, n_regions=n_regions,
+                  hot_threshold=hot_threshold, **policy_kw)
+    negotiate(wp, pol, layout=layout, chunked=chunked)
+    if getattr(pol, "owns_state", not hasattr(pol, "decide")):
+        module = DecisionModule(policy=pol)
+    else:
+        module = DecisionModule(policy=pol, monitor=monitor)
+    return wp, module
+
+
+__all__ = [
+    "CAP_DIRECT", "CAP_STAGED", "CAP_BULK_PIN",
+    "WritePath", "register_path", "get_path", "available_paths",
+    "DIRECT", "STAGED", "ADAPTIVE",
+    "negotiate", "build_decision",
+]

@@ -19,11 +19,22 @@ Fig. 3 lines), and a beyond-paper ``Bandit``-style hysteresis wrapper.
 
 All ``decide`` functions are vectorized and jit-compatible: they must run on
 the critical path "faster than the expected savings".
+
+Registry (the serving API's decision plane): every policy conforms to the
+:class:`RoutingPolicy` protocol — ``init_state()`` builds the routing
+state, ``route(state, batch, mask)`` updates counters and emits the
+per-request unload mask — and is registered by name via
+:func:`register_policy`, so engines are configured from
+``(policy="hysteresis", path="adaptive")`` strings
+(``repro.core.paths.build_decision``). A policy declares the decisions it
+can emit (``emits``: "offload" / "unload") for capability negotiation
+against the write path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple, Union
+from typing import Callable, Dict, NamedTuple, Optional, Protocol, Tuple, Union
+from typing import runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -33,25 +44,74 @@ from .types import WriteBatch
 
 Monitor = Union[ExactMonitor, CMSMonitor]
 
+OFFLOADS = frozenset({"offload"})
+UNLOADS = frozenset({"unload"})
+BOTH_PATHS = OFFLOADS | UNLOADS
+
+
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    """The decision-plane contract every registered policy satisfies.
+
+    ``emits`` names the routing decisions the policy can produce (for
+    capability negotiation against a ``WritePath``); ``owns_state`` is
+    True when ``init_state`` returns more than bare monitor counters (the
+    DecisionModule then threads the policy's state object instead of
+    owning a monitor itself).
+    """
+
+    emits: frozenset
+    owns_state: bool
+
+    def init_state(self): ...
+
+    def route(self, state, batch: WriteBatch,
+              mask: Optional[jnp.ndarray] = None): ...
+
+
+class _DecideRoute:
+    """RoutingPolicy adapter for decide-style policies: the routing state
+    is the (optional) monitor counters; ``route`` = update + decide."""
+
+    owns_state = False
+
+    def init_state(self):
+        mon = getattr(self, "monitor", None)
+        if self.needs_monitor and mon is not None:
+            return mon.init()
+        return None
+
+    def route(self, state, batch: WriteBatch,
+              mask: Optional[jnp.ndarray] = None):
+        mon = getattr(self, "monitor", None)
+        if self.needs_monitor and mon is not None:
+            state = mon.update(state, batch.region, mask=mask)
+        unload = self.decide(state, batch)
+        if mask is not None:
+            unload = unload & mask
+        return unload, state
+
 
 @dataclasses.dataclass(frozen=True)
-class AlwaysOffload:
+class AlwaysOffload(_DecideRoute):
     needs_monitor: bool = False
+    emits = OFFLOADS
 
     def decide(self, state: Optional[MonitorState], batch: WriteBatch) -> jnp.ndarray:
         return jnp.zeros((batch.n,), jnp.bool_)
 
 
 @dataclasses.dataclass(frozen=True)
-class AlwaysUnload:
+class AlwaysUnload(_DecideRoute):
     needs_monitor: bool = False
+    emits = UNLOADS
 
     def decide(self, state: Optional[MonitorState], batch: WriteBatch) -> jnp.ndarray:
         return jnp.ones((batch.n,), jnp.bool_)
 
 
 @dataclasses.dataclass(frozen=True)
-class HintPolicy:
+class HintPolicy(_DecideRoute):
     """Offload requests the application marked hot; unload the rest.
 
     Either consume the per-request ``hint`` field (paper's "marks the
@@ -64,6 +124,7 @@ class HintPolicy:
     hot_regions: Optional[jnp.ndarray] = None  # bool[n_regions] membership
     max_unload_size: int = 4096
     needs_monitor: bool = False
+    emits = BOTH_PATHS
 
     def decide(self, state: Optional[MonitorState], batch: WriteBatch) -> jnp.ndarray:
         if self.hot_regions is not None:
@@ -75,7 +136,7 @@ class HintPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
-class FrequencyPolicy:
+class FrequencyPolicy(_DecideRoute):
     """Unload small writes to regions colder than a frequency threshold.
 
     ``threshold`` is an absolute count; recalibrate it off the critical path
@@ -90,6 +151,7 @@ class FrequencyPolicy:
     n_regions: Optional[int] = None
     max_unload_size: int = 4096
     needs_monitor: bool = True
+    emits = BOTH_PATHS
 
     def decide(self, state: MonitorState, batch: WriteBatch) -> jnp.ndarray:
         est = self.monitor.query(state, batch.region)
@@ -144,6 +206,8 @@ class HysteresisPolicy:
     n_regions: Optional[int] = None
     max_unload_size: int = 4096
     needs_monitor: bool = True
+    emits = BOTH_PATHS
+    owns_state = True
 
     def _n_regions(self) -> int:
         n = self.n_regions or getattr(self.monitor, "n_regions", None)
@@ -200,6 +264,14 @@ class HysteresisPolicy:
             unload = unload & mask
         return unload, HysteresisState(mon, last)
 
+    def heat(self, state: HysteresisState, regions) -> HysteresisState:
+        """Off-critical-path counter heating (bulk admission prefills):
+        regions warm the monitor without recording a routing decision."""
+        return HysteresisState(
+            self.monitor.update(state.mon, jnp.asarray(regions, jnp.int32)),
+            state.last_unload,
+        )
+
     def decide(self, state, batch: WriteBatch) -> jnp.ndarray:
         """Read-only decision (no counter update, no memory write). Accepts
         either a :class:`HysteresisState` or a bare ``MonitorState`` (then
@@ -211,6 +283,83 @@ class HysteresisPolicy:
             mon_state, prev = state, jnp.zeros((batch.n,), jnp.bool_)
         est = self.monitor.query(mon_state, batch.region)
         return self._band(est, prev) & (batch.size <= self.max_unload_size)
+
+
+# ---------------------------------------------------------------------------
+# Registry: RoutingPolicy factories by name
+# ---------------------------------------------------------------------------
+
+# factory(monitor=..., n_regions=..., hot_threshold=..., **extra) -> policy.
+# Factories receive the engine-supplied context and pick what they need;
+# unknown extras are an error (loud beats silent misconfiguration).
+_POLICIES: Dict[str, Callable] = {}
+
+
+def register_policy(name: str, factory: Callable, *,
+                    overwrite: bool = False) -> None:
+    """Register a :class:`RoutingPolicy` factory under ``name``.
+
+    ``factory(monitor, n_regions, hot_threshold, **extra)`` must return a
+    policy satisfying the protocol (``emits``/``init_state``/``route``).
+    Third-party policies register here and become constructible from
+    config strings everywhere an engine takes ``policy="..."``.
+    """
+    if name in _POLICIES and not overwrite:
+        raise ValueError(
+            f"policy {name!r} already registered "
+            f"(pass overwrite=True to replace it)")
+    _POLICIES[name] = factory
+
+
+def get_policy_factory(name: str) -> Callable:
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; registered policies: "
+            f"{sorted(_POLICIES)}") from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_POLICIES))
+
+
+def _mk_always_offload(monitor=None, n_regions=None, hot_threshold=None):
+    return AlwaysOffload()
+
+
+def _mk_always_unload(monitor=None, n_regions=None, hot_threshold=None):
+    return AlwaysUnload()
+
+
+def _mk_hint(monitor=None, n_regions=None, hot_threshold=None,
+             hot_regions=None, max_unload_size=4096):
+    return HintPolicy(hot_regions=hot_regions,
+                      max_unload_size=max_unload_size)
+
+
+def _mk_frequency(monitor=None, n_regions=None, hot_threshold=4,
+                  max_unload_size=4096):
+    monitor = monitor or ExactMonitor(n_regions=n_regions or (1 << 20))
+    return FrequencyPolicy(monitor=monitor, threshold=hot_threshold,
+                           max_unload_size=max_unload_size)
+
+
+def _mk_hysteresis(monitor=None, n_regions=None, hot_threshold=4,
+                   lo=None, hi=None, max_unload_size=4096):
+    monitor = monitor or ExactMonitor(n_regions=n_regions or (1 << 20))
+    hi = hi if hi is not None else max(2, int(hot_threshold))
+    lo = lo if lo is not None else max(1, hi // 2)
+    return HysteresisPolicy(monitor=monitor, lo=lo, hi=hi,
+                            n_regions=n_regions,
+                            max_unload_size=max_unload_size)
+
+
+register_policy("always-offload", _mk_always_offload)
+register_policy("always-unload", _mk_always_unload)
+register_policy("hint", _mk_hint)
+register_policy("frequency", _mk_frequency)
+register_policy("hysteresis", _mk_hysteresis)
 
 
 def top_k_hot_table(counts: jnp.ndarray, k: int) -> jnp.ndarray:

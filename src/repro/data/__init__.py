@@ -1,3 +1,4 @@
+from ..models.sampling import SamplingParams
 from .pipeline import (
     DataConfig,
     MemmapSource,
@@ -14,6 +15,7 @@ __all__ = [
     "Pipeline",
     "Request",
     "RequestQueue",
+    "SamplingParams",
     "SyntheticSource",
     "synthetic_requests",
 ]

@@ -22,9 +22,12 @@ import collections
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+import warnings
+from typing import Dict, Iterator, Optional, Sequence, Union
 
 import numpy as np
+
+from ..models.sampling import SamplingParams
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,21 +100,40 @@ def _splitmix(x: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: a prompt plus its generation budget.
+    """One serving request: a prompt plus its per-request
+    ``SamplingParams`` (temperature / top-k / top-p / max_tokens / stop
+    set / seed — ``repro.models.sampling``).
 
-    ``max_new`` counts EVERY emitted token, including the one the prefill
-    produces; the scheduler retires the request after ``max_new`` tokens or
-    on EOS, whichever comes first.
+    ``params.max_tokens`` counts EVERY emitted token, including the one
+    the prefill produces; the scheduler retires the request after
+    ``max_tokens`` tokens or on a stop token, whichever comes first.
     """
 
     req_id: int
     prompt: np.ndarray               # int32 [plen]
-    max_new: int
+    params: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     media: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if isinstance(self.params, int):
+            # deprecation shim: PR-3-era code constructed
+            # Request(rid, prompt, max_new) with a bare budget in the
+            # third slot — coerce it so those scripts keep running
+            warnings.warn(
+                "Request(..., max_new) is deprecated; pass "
+                "params=SamplingParams(max_tokens=...) instead",
+                DeprecationWarning, stacklevel=3)
+            self.params = SamplingParams(max_tokens=self.params)
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[-1])
+
+    @property
+    def max_new(self) -> int:
+        """Legacy alias for ``params.max_tokens``."""
+        return self.params.max_tokens
 
 
 class RequestQueue:
@@ -133,14 +155,24 @@ class RequestQueue:
     def __len__(self) -> int:
         return len(self._q)
 
-    def submit(self, prompt, max_new: int, media=None) -> int:
-        """Enqueue one request; returns its id (submission order)."""
+    def submit(self, prompt, max_new: Optional[int] = None, media=None,
+               params: Optional[SamplingParams] = None) -> int:
+        """Enqueue one request; returns its id (submission order).
+
+        ``params`` carries the per-request sampling knobs; the legacy
+        ``max_new`` argument overrides ``params.max_tokens`` when given
+        (``submit(prompt, 8)`` keeps meaning what it always did).
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1 (the prefill token counts)")
+        if params is None:
+            if max_new is None:
+                raise ValueError("submit needs max_new or params")
+            params = SamplingParams(max_tokens=int(max_new))
+        elif max_new is not None:
+            params = dataclasses.replace(params, max_tokens=int(max_new))
         rid = self._next_id
         self._next_id += 1
-        self._q.append(Request(rid, prompt, int(max_new), media))
+        self._q.append(Request(rid, prompt, params, media))
         return rid
 
     def peek(self) -> Request:
@@ -171,6 +203,7 @@ def synthetic_requests(
     max_new: int,
     seed: int = 0,
     media_shape=None,
+    params: Union[SamplingParams, Sequence[SamplingParams], None] = None,
 ) -> RequestQueue:
     """Deterministic request workload (splitmix-hashed prompts — the same
     generator the synthetic training source uses, so every (seed, i) pair
@@ -180,9 +213,19 @@ def synthetic_requests(
     ``prompt_len[i % len(prompt_len)]`` — the mixed long/short-prompt
     workload the chunked-prefill scheduler and its benchmark exercise
     (request ``i``'s prompt is the same for any surrounding mix).
+
+    ``params`` threads per-request SamplingParams through the queue: one
+    object applies to every request, a sequence assigns request ``i``
+    ``params[i % len(params)]`` (cycled like ``prompt_len``), and each
+    request's own ``max_tokens`` is honored; ``max_new`` applies only
+    when ``params`` is None. Prompt generation is independent of the
+    sampling mix either way.
     """
     plens = (list(prompt_len) if hasattr(prompt_len, "__len__")
              else [int(prompt_len)])
+    plist = (None if params is None
+             else (list(params) if hasattr(params, "__len__")
+                   else [params]))
     q = RequestQueue()
     for i in range(n):
         plen = int(plens[i % len(plens)])
@@ -195,7 +238,10 @@ def synthetic_requests(
                 + (seed + 1) * (i + 1)
             )
             media = (flat % 1024).astype(np.float32).reshape(media_shape) / 512.0 - 1.0
-        q.submit(prompt, max_new, media=media)
+        if plist is None:
+            q.submit(prompt, max_new, media=media)
+        else:
+            q.submit(prompt, media=media, params=plist[i % len(plist)])
     return q
 
 

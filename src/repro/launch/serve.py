@@ -1,15 +1,18 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Two serving modes:
+One front door (``repro.serve.Engine``), two workload shapes:
 
-* default — batched prefill + device-resident decode with uRDMA KV-write
-  routing (direct / staged / adaptive) through ``ServeEngine``.
-* ``--batched`` — slot-based continuous batching over the paged KV pool
-  (``BatchedServeEngine``): a stream of ``--requests`` synthetic requests
-  is admitted FIFO into ``--slots`` serving slots, decoded in jitted scan
-  segments with EOS/max-len retirement between them.
+* default — serve ``--batch`` same-length prompts concurrently (one slot
+  per prompt) and report throughput: the batched-generate workload.
+* ``--batched`` — continuous batching: a stream of ``--requests``
+  synthetic requests admitted FIFO into ``--slots`` serving slots,
+  decoded in jitted scan segments with EOS/max-len retirement between
+  them (optionally ``--chunked`` mixed-phase prefill).
 
-Reduced configs on CPU; production shardings under a mesh.
+The write path and routing policy are registry names
+(``repro.core.paths`` / ``repro.core.policy``); sampling is per-request
+``SamplingParams``. Reduced configs on CPU; production shardings under a
+mesh.
 """
 from __future__ import annotations
 
@@ -18,11 +21,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..configs import get_config
 from ..data import synthetic_requests
-from ..models import build_model, media_spec, needs_media
-from ..serve import BatchConfig, BatchedServeEngine, ServeConfig, ServeEngine
+from ..models import media_spec, needs_media
+from ..models.sampling import SamplingParams
+from ..serve import Engine, EngineConfig, build_model_and_params
 from ..serve.scheduler import paged_capable
 
 
@@ -33,8 +37,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--write-mode", default="adaptive",
-                    choices=("direct", "staged", "adaptive"))
+    ap.add_argument("--write-mode", "--path", dest="path", default="adaptive",
+                    help="registered WritePath name (direct/staged/"
+                         "adaptive/... — repro.core.paths)")
+    ap.add_argument("--policy", default=None,
+                    help="registered RoutingPolicy name (default: the "
+                         "path's default policy)")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="sampling temperature (default: greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed")
     ap.add_argument("--ring-size", type=int, default=8)
     ap.add_argument("--batched", action="store_true",
                     help="continuous batching over the paged KV pool")
@@ -55,9 +69,17 @@ def main() -> None:
                          "prompt of this length (mixed workload)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0), args.max_seq)
+    cfg, model, params = build_model_and_params(args.arch, args.max_seq)
+
+    path = args.path
+    if path != "direct" and not paged_capable(model):
+        print(f"[serve] {cfg.name}: lanes layout is direct-only; "
+              f"downgrading --write-mode {path} -> direct")
+        path = "direct"
+    sp = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed, max_tokens=args.gen_len,
+    )
 
     if args.batched:
         media_shape = None
@@ -68,19 +90,14 @@ def main() -> None:
             plens = [args.long_prompt_len] + [args.prompt_len] * 3
         queue = synthetic_requests(
             args.requests, plens, cfg.vocab, args.gen_len,
-            media_shape=media_shape,
+            media_shape=media_shape, params=sp,
         )
-        write_mode = args.write_mode
-        if write_mode != "direct" and not paged_capable(model):
-            print(f"[serve] {cfg.name}: lanes layout is direct-only; "
-                  f"downgrading --write-mode {write_mode} -> direct")
-            write_mode = "direct"
-        eng = BatchedServeEngine(model, params, BatchConfig(
+        eng = Engine.from_config(EngineConfig(
             max_seq=args.max_seq, n_slots=args.slots,
-            segment_len=args.segment_len, write_mode=write_mode,
+            segment_len=args.segment_len, path=path, policy=args.policy,
             page_size=args.page_size, ring_size=args.ring_size,
             chunked=args.chunked, chunk_size=args.chunk_size,
-        ))
+        ), model, params)
         t0 = time.perf_counter()
         outputs = eng.serve(queue)
         dt = time.perf_counter() - t0
@@ -95,24 +112,26 @@ def main() -> None:
         print(f"write-path stats: {eng.stats}")
         return
 
-    prompt = jax.random.randint(
-        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab
-    )
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab, size=args.prompt_len)
+               for _ in range(args.batch)]
     media = None
     if needs_media(cfg):
-        media = jax.random.normal(
-            jax.random.key(2), media_spec(cfg, args.batch, jnp.float32).shape
-        )
+        media = [np.asarray(jax.random.normal(
+            jax.random.key(2), media_spec(cfg, 1, jnp.float32).shape[1:]))
+            for _ in range(args.batch)]
 
-    eng = ServeEngine(model, params, ServeConfig(
-        max_seq=args.max_seq, write_mode=args.write_mode,
-        ring_size=args.ring_size,
-    ))
+    eng = Engine.from_config(EngineConfig(
+        max_seq=args.max_seq, n_slots=args.batch, path=path,
+        policy=args.policy, ring_size=args.ring_size,
+        page_size=args.page_size,
+    ), model, params)
     t0 = time.perf_counter()
-    toks = eng.generate(prompt, args.gen_len, media=media)
+    comps = eng.generate(prompts, sp, media=media)
     dt = time.perf_counter() - t0
-    print(f"generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen_len / dt:.1f} tok/s)")
+    n_toks = sum(c.n_tokens for c in comps)
+    print(f"generated {len(comps)} x {args.gen_len} tokens in {dt:.2f}s "
+          f"({n_toks / dt:.1f} tok/s)")
     print(f"write-path stats: {eng.stats}")
 
 

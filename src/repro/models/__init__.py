@@ -1,6 +1,8 @@
 """Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM families with a
-unified init/loss/prefill/decode API and uRDMA write-engine hooks."""
+unified init/loss/prefill/decode API and uRDMA write-engine hooks, plus
+the per-request sampling layer the serving engines drive."""
 from .model import abstract_params, build_model, input_specs, media_spec, needs_media
+from .sampling import SamplingParams, SlotParams, sample_tokens
 
 __all__ = [
     "abstract_params",
@@ -8,4 +10,7 @@ __all__ = [
     "input_specs",
     "media_spec",
     "needs_media",
+    "SamplingParams",
+    "SlotParams",
+    "sample_tokens",
 ]

@@ -1,0 +1,218 @@
+"""Per-request sampling: ``SamplingParams`` and the in-scan slot sampler.
+
+The serving API takes one ``SamplingParams`` per request; the scheduler
+loads the fields into fixed-shape per-slot arrays (``SlotState`` carries
+them through the jitted scan) and every decode step samples each slot
+under ITS OWN parameters — temperature / top-k / top-p / stop set — with
+a per-slot PRNG chain. Two requests with different parameters decoding in
+one batch are bit-identical to the same requests run sequentially: the
+sampler is a pure per-slot function of (logits, key, params).
+
+Equivalence contract (the deprecation-shim tests pin it):
+
+* ``temperature == 0``  -> greedy argmax, exactly the legacy
+  ``greedy=True`` engines (argmax never reads the key, so the always-split
+  key chain is invisible).
+* ``temperature == 1, top_k == 0, top_p == 1`` -> bit-identical to the
+  legacy sampled path (``jax.random.categorical`` on unmodified logits:
+  ``x / 1.0`` is exact and the disabled filters are ``jnp.where`` no-ops).
+* filters compose in the standard order: temperature scale -> top-k mask
+  -> top-p (nucleus) mask -> categorical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Fixed width of the per-slot stop-token table inside the scan (padded
+# with -1, which no vocabulary token equals). cfg.eos_id takes one entry.
+MAX_STOP_TOKENS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling parameters (the public request knobs).
+
+    temperature   0 = greedy argmax; > 0 = categorical over logits/T.
+                  ``None`` defers to the engine default (its legacy
+                  ``greedy`` flag: 0.0 when greedy, 1.0 when sampled).
+    top_k         keep only the k highest logits (0 = disabled).
+    top_p         nucleus sampling: keep the smallest prefix of the sorted
+                  distribution with cumulative mass >= top_p (1.0 =
+                  disabled).
+    max_tokens    generation budget, counting the prefill-emitted token.
+    stop_token_ids  emitting any of these retires the request (the
+                  engine's ``eos_id`` is always added on top).
+    seed          per-request PRNG seed. ``None`` derives the slot key
+                  from (engine sample_seed, request id) — the legacy
+                  behavior; an explicit seed makes the stream independent
+                  of the request id (and so reproducible across queues).
+    """
+
+    temperature: Optional[float] = None
+    top_k: int = 0
+    top_p: float = 1.0
+    max_tokens: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1 (the prefill token counts)")
+        if self.temperature is not None and self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError("top_p must be in (0, 1]")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+        if len(self.stop_token_ids) > MAX_STOP_TOKENS - 1:
+            raise ValueError(
+                f"at most {MAX_STOP_TOKENS - 1} stop_token_ids "
+                f"(one slot is reserved for the engine eos_id)")
+
+
+class SlotParams(NamedTuple):
+    """``SamplingParams`` resolved into fixed-shape per-slot arrays — the
+    form that lives in the scan carry (``SlotState`` embeds these fields).
+
+    temperature: f32[S]; top_k: i32[S]; top_p: f32[S];
+    stop: i32[S, MAX_STOP_TOKENS] (-1 padded)
+    """
+
+    temperature: jnp.ndarray
+    top_k: jnp.ndarray
+    top_p: jnp.ndarray
+    stop: jnp.ndarray
+
+
+def make_slot_params(n_slots: int) -> SlotParams:
+    return SlotParams(
+        temperature=jnp.zeros((n_slots,), jnp.float32),
+        top_k=jnp.zeros((n_slots,), jnp.int32),
+        top_p=jnp.ones((n_slots,), jnp.float32),
+        stop=jnp.full((n_slots, MAX_STOP_TOKENS), -1, jnp.int32),
+    )
+
+
+def stop_table(params: SamplingParams, eos_id: Optional[int]) -> list:
+    """The request's -1-padded stop row: stop_token_ids + engine eos_id."""
+    ids = list(params.stop_token_ids)
+    if eos_id is not None and eos_id not in ids:
+        ids.append(int(eos_id))
+    if len(ids) > MAX_STOP_TOKENS:
+        raise ValueError(f"stop set {ids} exceeds {MAX_STOP_TOKENS} entries")
+    return ids + [-1] * (MAX_STOP_TOKENS - len(ids))
+
+
+# Static sampler variants (the scheduler picks per scan segment from the
+# LIVE slots' resolved params, so a pure-greedy workload compiles and
+# pays exactly the legacy argmax step):
+#   greedy    every live slot has temperature == 0 — argmax, no splits
+#   sampled   temperatures only — split + categorical (no vocab sort)
+#   filtered  some slot uses top-k / top-p — full mask via one sort
+SAMPLE_MODES = ("greedy", "sampled", "filtered")
+
+
+def _filter_logits(scaled: jnp.ndarray, top_k: jnp.ndarray,
+                   top_p: jnp.ndarray) -> jnp.ndarray:
+    """One slot's top-k/top-p mask over temperature-scaled logits [V].
+
+    Both filters keep a PREFIX of the descending sort, so they reduce to
+    a single logit threshold from ONE sort: rank < top_k, and cumulative
+    (post-top-k) mass strictly before the token < top_p. Disabled
+    filters are exact no-ops (``jnp.where`` keeps the untouched array),
+    so default params reproduce the legacy sampler bit-for-bit.
+    """
+    v = scaled.shape[-1]
+    desc = jnp.sort(scaled)[::-1]
+    k_eff = jnp.where((top_k > 0) & (top_k < v), top_k, v)
+    in_k = jnp.arange(v) < k_eff
+    p_desc = jax.nn.softmax(jnp.where(in_k, desc, -jnp.inf))
+    csum = jnp.cumsum(p_desc)
+    # ranks beyond k_eff carry p_desc == 0 and csum == 1, so the top-p
+    # prefix test also enforces top-k; the rank-0 token always survives
+    n_keep = jnp.sum(in_k & ((csum - p_desc) < jnp.minimum(top_p, 1.0)))
+    thr = desc[jnp.clip(n_keep - 1, 0, v - 1)]
+    enabled = (top_p < 1.0) | ((top_k > 0) & (top_k < v))
+    return jnp.where(enabled & (scaled < thr), -jnp.inf, scaled)
+
+
+def sample_tokens(logits: jnp.ndarray, key_data: jnp.ndarray,
+                  params: SlotParams, mode: str = "filtered",
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample every slot under its own parameters.
+
+    logits f32[S, V], key_data uint32[S, 2] -> (tokens i32[S], new key
+    data). ``mode`` is a STATIC specialization hint (``SAMPLE_MODES``);
+    it must cover the live slots' params (the scheduler guarantees it)
+    and never changes results, only how much work is traced. In the
+    sampling modes each slot's key chain splits exactly once per call —
+    the same consumption schedule whether the slot's own temperature is
+    zero or not, so batch composition never shifts a request's stream
+    (greedy slots simply never read their subkey).
+    """
+    assert mode in SAMPLE_MODES, mode
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if mode == "greedy":
+        return greedy, key_data
+    pairs = jax.vmap(jax.random.split)(jax.random.wrap_key_data(key_data))
+    temp = params.temperature
+    scaled = logits / jnp.where(temp > 0, temp, 1.0)[:, None]
+    if mode == "filtered":
+        scaled = jax.vmap(_filter_logits)(scaled, params.top_k,
+                                          params.top_p)
+    sampled = jax.vmap(jax.random.categorical)(
+        pairs[:, 0], scaled).astype(jnp.int32)
+    tokens = jnp.where(temp > 0, sampled, greedy)
+    return tokens, jax.random.key_data(pairs[:, 1])
+
+
+def required_mode(params_list) -> str:
+    """The cheapest static sampler variant covering every given
+    SamplingParams (resolved, i.e. temperature is a float). Filters only
+    matter on slots that actually sample (temperature > 0)."""
+    mode = "greedy"
+    for p in params_list:
+        if p.temperature > 0:
+            if p.top_k > 0 or p.top_p < 1.0:
+                return "filtered"
+            mode = "sampled"
+    return mode
+
+
+def hits_stop(tokens: jnp.ndarray, stop: jnp.ndarray) -> jnp.ndarray:
+    """bool[S]: does each slot's emitted token hit its stop set?
+    (-1 padding never matches a real token id.)"""
+    return jnp.any(tokens[:, None] == stop, axis=1)
+
+
+def resolve(params: Optional[SamplingParams],
+            default: Optional[SamplingParams],
+            greedy_default: bool) -> SamplingParams:
+    """Resolve a request's effective params. A request's own
+    SamplingParams win wholesale; requests without one take the
+    engine-wide ``default``. The one per-field backfill is the
+    ``None``-marked temperature: request -> engine default's temperature
+    -> the legacy ``greedy`` flag (0.0 when greedy, 1.0 when sampled)."""
+    p = params if params is not None else (default or SamplingParams())
+    if p.temperature is None:
+        fallback = (default.temperature
+                    if default is not None and default.temperature is not None
+                    else None)
+        if fallback is None:
+            fallback = 0.0 if greedy_default else 1.0
+        p = dataclasses.replace(p, temperature=float(fallback))
+    return p
+
+
+def derive_key(base_key: jax.Array, req_id: int,
+               seed: Optional[int]) -> jax.Array:
+    """The slot PRNG key for one request: an explicit per-request seed
+    stands alone (stream independent of queue position / request id);
+    otherwise fold the request id into the engine's base key (legacy)."""
+    if seed is not None:
+        return jax.random.key(int(seed))
+    return jax.random.fold_in(base_key, int(req_id))

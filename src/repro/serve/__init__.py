@@ -1,7 +1,33 @@
+"""Serving layer.
+
+Public surface (pinned by ``tests/test_api_snapshot.py``):
+
+* :class:`Engine` / :class:`EngineConfig` — THE front door: per-request
+  ``SamplingParams``, ``generate``/``stream`` returning
+  :class:`Completion` objects, write path + routing policy chosen by
+  registry name.
+* ``ServeEngine`` / ``BatchedServeEngine`` — deprecated constructor
+  shims (one release): fully functional, but new code should go through
+  ``Engine.from_config``.
+"""
+from ..models.sampling import SamplingParams
+from .api import (
+    Completion,
+    Engine,
+    EngineConfig,
+    StreamEvent,
+    build_model_and_params,
+)
 from .engine import WRITE_MODES, ServeConfig, ServeEngine, make_decision
 from .scheduler import BatchConfig, BatchedServeEngine, SlotState, make_slots
 
 __all__ = [
+    "Engine",
+    "EngineConfig",
+    "Completion",
+    "SamplingParams",
+    "StreamEvent",
+    "build_model_and_params",
     "WRITE_MODES",
     "ServeConfig",
     "ServeEngine",

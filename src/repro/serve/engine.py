@@ -32,6 +32,7 @@ staged/adaptive need ring-overlay support (dense DecoderLM family).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -39,31 +40,26 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.decision import DecisionModule
-from ..core.monitor import ExactMonitor
-from ..core.policy import AlwaysOffload, AlwaysUnload, FrequencyPolicy
+from ..core.paths import build_decision
 from ..core.types import make_write_batch
 from ..kvcache import add_ring, drain_ring, maybe_drain, strip_ring
 
+# Legacy write-mode strings == the built-in WritePath registry names
+# (repro.core.paths); kept for the deprecation window.
 WRITE_MODES = ("direct", "staged", "adaptive")
 
 
 def make_decision(write_mode: str, n_regions: int,
                   hot_threshold: int) -> DecisionModule:
-    """The ONE decision-plane factory for every serving engine.
-
-    Trivial policies make direct/staged a degenerate routing rather than a
-    separate code path; adaptive runs the paper's frequency policy over the
-    region universe the caller monitors (dense engine: per-sequence pages;
-    batched engine: physical pool blocks).
-    """
+    """Deprecated shim: the decision plane is built from the path/policy
+    registries now (``repro.core.paths.build_decision``); each legacy
+    write mode resolves to the same-named built-in path and its default
+    policy (direct -> always-offload, staged -> always-unload,
+    adaptive -> frequency)."""
     assert write_mode in WRITE_MODES, write_mode
-    monitor = ExactMonitor(n_regions=n_regions)
-    policy = {
-        "direct": AlwaysOffload(),
-        "staged": AlwaysUnload(),
-        "adaptive": FrequencyPolicy(monitor=monitor, threshold=hot_threshold),
-    }[write_mode]
-    return DecisionModule(policy=policy, monitor=monitor)
+    _, module = build_decision(write_mode, n_regions=n_regions,
+                               hot_threshold=hot_threshold)
+    return module
 
 
 @dataclasses.dataclass
@@ -78,7 +74,13 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, cfg: ServeConfig):
+    def __init__(self, model, params, cfg: ServeConfig, _warn: bool = True):
+        if _warn:
+            warnings.warn(
+                "constructing ServeEngine directly is deprecated; use "
+                "repro.serve.Engine.from_config(...) — the shim stays for "
+                "one release",
+                DeprecationWarning, stacklevel=2)
         assert cfg.write_mode in WRITE_MODES, cfg.write_mode
         self.model = model
         self.params = params

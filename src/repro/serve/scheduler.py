@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
@@ -69,11 +70,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..core.paths import build_decision
 from ..core.types import PHASE_BULK, PHASE_SCATTERED, make_write_batch
 from ..data.pipeline import RequestQueue
 from ..kvcache import paged as PG
+from ..models import sampling as SMP
+from ..models.sampling import SamplingParams, SlotParams
 from ..models.transformer import DecoderLM, direct_kv_write
-from .engine import WRITE_MODES, make_decision
 
 # Slot phases (values of SlotState.phase). DONE is not a phase: the `done`
 # flag retires a slot out of both phases.
@@ -103,6 +106,14 @@ class SlotState(NamedTuple):
     key:       uint32[S, 2] per-slot PRNG key data (sampled decode)
     req_id:    int32[S] owning request id (-1 = empty)
     plen:      int32[S] prompt length (the PREFILL→DECODE flip point)
+
+    Per-request sampling parameters (``repro.models.sampling``) ride in
+    the same carry so every decode step samples each slot under its own
+    request's knobs:
+
+    temperature: f32[S]; top_k: i32[S]; top_p: f32[S];
+    stop: i32[S, MAX_STOP_TOKENS] stop-token table (-1 padded, includes
+    the engine eos_id)
     """
 
     phase: jnp.ndarray
@@ -113,9 +124,19 @@ class SlotState(NamedTuple):
     key: jnp.ndarray
     req_id: jnp.ndarray
     plen: jnp.ndarray
+    temperature: jnp.ndarray
+    top_k: jnp.ndarray
+    top_p: jnp.ndarray
+    stop: jnp.ndarray
+
+    @property
+    def sampling(self) -> SlotParams:
+        return SlotParams(temperature=self.temperature, top_k=self.top_k,
+                          top_p=self.top_p, stop=self.stop)
 
 
 def make_slots(n_slots: int) -> SlotState:
+    sp = SMP.make_slot_params(n_slots)
     return SlotState(
         phase=jnp.full((n_slots,), PHASE_DECODE, jnp.int32),
         token=jnp.zeros((n_slots,), jnp.int32),
@@ -125,6 +146,10 @@ def make_slots(n_slots: int) -> SlotState:
         key=jnp.zeros((n_slots, 2), jnp.uint32),
         req_id=jnp.full((n_slots,), -1, jnp.int32),
         plen=jnp.zeros((n_slots,), jnp.int32),
+        temperature=sp.temperature,
+        top_k=sp.top_k,
+        top_p=sp.top_p,
+        stop=sp.stop,
     )
 
 
@@ -137,6 +162,15 @@ class BatchConfig:
     ``chunked`` admits prompts immediately and prefills them in
     ``chunk_size``-token chunks inside the decode scan (paged layout; the
     lanes layout chunk-prefills at admission instead).
+
+    ``path`` / ``policy`` name a registered ``repro.core.paths.WritePath``
+    and ``RoutingPolicy`` (capability-negotiated at construction);
+    ``write_mode`` is the legacy alias — the built-in path names coincide
+    with the old mode strings, and ``path`` wins when both are set.
+    ``default_params`` supplies engine-wide ``SamplingParams`` defaults
+    for requests that carry none; ``greedy`` is the legacy temperature
+    default (0.0 when True, 1.0 when False) for params that leave
+    ``temperature`` unset.
     """
 
     max_seq: int
@@ -154,6 +188,9 @@ class BatchConfig:
     sample_seed: int = 0
     chunked: bool = False
     chunk_size: int = 8
+    path: Optional[str] = None
+    policy: Optional[str] = None
+    default_params: Optional[SamplingParams] = None
 
 
 class BatchedServeEngine:
@@ -163,8 +200,13 @@ class BatchedServeEngine:
     >>> outputs = eng.serve(queue)          # {req_id: np.ndarray tokens}
     """
 
-    def __init__(self, model, params, cfg: BatchConfig):
-        assert cfg.write_mode in WRITE_MODES, cfg.write_mode
+    def __init__(self, model, params, cfg: BatchConfig, _warn: bool = True):
+        if _warn:
+            warnings.warn(
+                "constructing BatchedServeEngine directly is deprecated; "
+                "use repro.serve.Engine.from_config(...) — the shim stays "
+                "for one release",
+                DeprecationWarning, stacklevel=2)
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -177,11 +219,6 @@ class BatchedServeEngine:
                 f"paged KV serves the linear-addressed dense family; "
                 f"{model.cfg.name} needs kv_layout='lanes'"
             )
-        if layout == "lanes" and cfg.write_mode != "direct":
-            raise ValueError(
-                "staged/adaptive write modes need the paged layout "
-                "(ring overlay is wired for dense non-SWA caches)"
-            )
         if cfg.chunked and cfg.chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         self.layout = layout
@@ -193,8 +230,14 @@ class BatchedServeEngine:
         # (lanes) — either way the monitor sees the interleaved stream
         n_regions = (self.n_blocks if layout == "paged"
                      else cfg.n_slots * self.max_pages)
-        self.decision = make_decision(cfg.write_mode, n_regions,
-                                      cfg.hot_threshold)
+        # registry-driven decision plane: resolve the (path, policy) names,
+        # negotiate capabilities against the layout/scheduling (loud error
+        # on e.g. lanes + a staged-capable path)
+        self.path, self.decision = build_decision(
+            cfg.path or cfg.write_mode, cfg.policy, n_regions=n_regions,
+            hot_threshold=cfg.hot_threshold, layout=layout,
+            chunked=cfg.chunked)
+        self.uses_ring = self.path.uses_ring
         self.mon_state = self.decision.init_state()
 
         if layout == "paged":
@@ -204,7 +247,7 @@ class BatchedServeEngine:
             self.cache = PG.make_paged_kv(
                 l, self.n_blocks, ps, cfg.n_slots, self.max_pages, h, dh,
                 dtype=shape["k"].dtype,
-                ring_size=cfg.ring_size if cfg.write_mode != "direct" else 0,
+                ring_size=cfg.ring_size if self.uses_ring else 0,
             )
         else:
             self.pool = None
@@ -224,11 +267,20 @@ class BatchedServeEngine:
         self._base_key = jax.random.key(cfg.sample_seed)
         self.outputs: Dict[int, List[int]] = {}
         self.ttft: Dict[int, float] = {}
+        # per-request telemetry: resolved SamplingParams and write-path
+        # counts [direct, staged, prefill] (the Completion payload)
+        self.req_params: Dict[int, SamplingParams] = {}
+        self.req_writes: Dict[int, np.ndarray] = {}
         self._t_serve0: Optional[float] = None
         self.stats = {
             "direct_writes": 0, "staged_writes": 0, "drains": 0,
             "prefill_writes": 0, "segments": 0, "admitted": 0, "retired": 0,
         }
+        # compiled segment variants keyed by STATIC sampler mode
+        # (greedy/sampled/filtered — repro.models.sampling); _segment_fn /
+        # _mixed_fn hold the last-used variant
+        self._segment_fns: Dict[str, Callable] = {}
+        self._mixed_fns: Dict[str, Callable] = {}
         self._segment_fn: Optional[Callable] = None
         self._mixed_fn: Optional[Callable] = None
         self._prefill_fns: Dict[Any, Callable] = {}
@@ -244,7 +296,7 @@ class BatchedServeEngine:
             self.cache = PG.make_paged_kv(
                 l, self.n_blocks, ps, cfg.n_slots, self.max_pages, h, dh,
                 dtype=self.cache["pages_k"].dtype,
-                ring_size=cfg.ring_size if cfg.write_mode != "direct" else 0,
+                ring_size=cfg.ring_size if self.uses_ring else 0,
             )
         else:
             self.cache = self.model.init_cache(cfg.n_slots, cfg.max_seq)
@@ -259,25 +311,27 @@ class BatchedServeEngine:
         self._slot_pages = [0] * cfg.n_slots
         self.outputs = {}
         self.ttft = {}
+        self.req_params = {}
+        self.req_writes = {}
         self._t_serve0 = None
         self.stats = {k: 0 for k in self.stats}
 
     # ------------------------------------------------------------------
     # segments: the jitted inner loops
     # ------------------------------------------------------------------
-    def _build_segment(self) -> Callable:
+    def _build_segment(self, mode: str) -> Callable:
         """Pure-decode segment: every live slot samples one token per step
         (the steady state; also the only segment the non-chunked engine
-        runs)."""
+        runs). ``mode`` statically specializes the sampler to the live
+        slots' params (a pure-greedy batch pays exactly the argmax step)."""
         model, cfg = self.model, self.cfg
         paged = self.layout == "paged"
-        ring = paged and cfg.write_mode != "direct"
+        ring = paged and self.uses_ring
         ps, nb, mp = cfg.page_size, self.n_blocks, self.max_pages
-        eos, greedy = cfg.eos_id, cfg.greedy
         decision = self.decision
 
         def step(params, enabled, carry, _):
-            cache, st, mon, stats = carry
+            cache, st, mon, stats, swrites = carry
             active = ~st.done & enabled
             if paged:
                 dest = PG.logical_to_physical(
@@ -312,29 +366,19 @@ class BatchedServeEngine:
 
                 logits, cache = model.decode_step(
                     params, cache, st.token, st.pos, kv_writer=masked_writer)
-            if greedy:
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                key = st.key
-            else:
-                pairs = jax.vmap(jax.random.split)(
-                    jax.random.wrap_key_data(st.key))
-                nxt = jax.vmap(jax.random.categorical)(
-                    pairs[:, 0], logits).astype(jnp.int32)
-                key = jax.random.key_data(pairs[:, 1])
+            # per-request sampling: every slot under its own params, its
+            # own key chain (repro.models.sampling contract)
+            nxt, key = SMP.sample_tokens(logits, st.key, st.sampling,
+                                         mode=mode)
             nxt = jnp.where(active, nxt, st.token)
             remaining = st.remaining - active.astype(jnp.int32)
-            ended = remaining <= 0
-            if eos is not None:
-                ended = ended | (nxt == eos)
-            st = SlotState(
-                phase=st.phase,
+            ended = (remaining <= 0) | SMP.hits_stop(nxt, st.stop)
+            st = st._replace(
                 token=nxt,
                 pos=st.pos + active.astype(jnp.int32),
                 done=st.done | (active & ended),
                 remaining=remaining,
                 key=key,
-                req_id=st.req_id,
-                plen=st.plen,
             )
             stats = stats + jnp.stack([
                 jnp.sum(active.astype(jnp.int32)) - n_u,
@@ -342,14 +386,20 @@ class BatchedServeEngine:
                 drained.astype(jnp.int32),
                 jnp.zeros((), jnp.int32),
             ])
+            swrites = swrites + jnp.stack([
+                (active & ~unload).astype(jnp.int32),
+                unload.astype(jnp.int32),
+                jnp.zeros_like(st.pos),
+            ], axis=1)
             emit = jnp.where(active, nxt, -1)
-            return (cache, st, mon, stats), (emit, active)
+            return (cache, st, mon, stats, swrites), (emit, active)
 
         def run(params, cache, st, mon, enabled):
             stats0 = jnp.zeros((4,), jnp.int32)
-            (cache, st, mon, stats), (emits, acts) = lax.scan(
+            sw0 = jnp.zeros((cfg.n_slots, 3), jnp.int32)
+            (cache, st, mon, stats, swrites), (emits, acts) = lax.scan(
                 lambda c, x: step(params, enabled, c, x),
-                (cache, st, mon, stats0),
+                (cache, st, mon, stats0, sw0),
                 None,
                 length=cfg.segment_len,
             )
@@ -358,11 +408,11 @@ class BatchedServeEngine:
                 # their blocks next — the ring must not hold entries that
                 # would later drain into reallocated blocks
                 cache = PG.drain_ring(cache, use_kernel=cfg.drain_kernel)
-            return cache, st, mon, stats, emits, acts
+            return cache, st, mon, stats, swrites, emits, acts
 
         return jax.jit(run)
 
-    def _build_mixed_segment(self) -> Callable:
+    def _build_mixed_segment(self, mode: str) -> Callable:
         """Mixed-phase segment (chunked, paged layout): each step every
         live slot processes a [chunk_size]-token slab — the next prompt
         chunk (PREFILL) or its one decode token (DECODE, column 0) — and a
@@ -372,13 +422,12 @@ class BatchedServeEngine:
         pins them to the offload/direct path; scattered decode writes keep
         adaptive routing."""
         model, cfg = self.model, self.cfg
-        ring = cfg.write_mode != "direct"
+        ring = self.uses_ring
         ps, nb, c = cfg.page_size, self.n_blocks, cfg.chunk_size
-        eos, greedy = cfg.eos_id, cfg.greedy
         decision = self.decision
 
         def step(params, prompts, enabled, carry, _):
-            cache, st, mon, stats = carry
+            cache, st, mon, stats, swrites = carry
             active = ~st.done & enabled
             is_pf = active & (st.phase == PHASE_PREFILL)
             # token slab: prefill slots read the device prompt buffer at
@@ -427,50 +476,46 @@ class BatchedServeEngine:
             # both engines and both sampling modes (parity with the
             # non-chunked engine's admission-time t0)
             t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            if greedy:
-                nxt, key = t0, st.key
-            else:
-                pairs = jax.vmap(jax.random.split)(
-                    jax.random.wrap_key_data(st.key))
-                sampled = jax.vmap(jax.random.categorical)(
-                    pairs[:, 0], logits).astype(jnp.int32)
-                dec = active & ~is_pf
-                # prefill steps consume no key: the per-request split
-                # sequence stays identical to the non-chunked engine
-                nxt = jnp.where(dec, sampled, t0)
-                key = jnp.where(dec[:, None],
-                                jax.random.key_data(pairs[:, 1]), st.key)
+            sampled, new_key = SMP.sample_tokens(logits, st.key,
+                                                 st.sampling, mode=mode)
+            dec = active & ~is_pf
+            # prefill steps consume no key: the per-request split
+            # sequence stays identical to the non-chunked engine
+            nxt = jnp.where(dec, sampled, t0)
+            key = jnp.where(dec[:, None], new_key, st.key)
             nxt = jnp.where(emitting, nxt, st.token)
             remaining = st.remaining - emitting.astype(jnp.int32)
-            ended = remaining <= 0
-            if eos is not None:
-                ended = ended | (nxt == eos)
-            st = SlotState(
+            ended = (remaining <= 0) | SMP.hits_stop(nxt, st.stop)
+            st = st._replace(
                 phase=jnp.where(finishing, PHASE_DECODE, st.phase),
                 token=nxt,
                 pos=st.pos + n_valid,
                 done=st.done | (emitting & ended),
                 remaining=remaining,
                 key=key,
-                req_id=st.req_id,
-                plen=st.plen,
             )
             stats = stats + jnp.stack(
                 [n_dec - n_u, n_u, drained.astype(jnp.int32), n_pf])
+            swrites = swrites + jnp.stack([
+                (dec & ~unload).astype(jnp.int32),
+                unload.astype(jnp.int32),
+                jnp.where(is_pf, n_valid, 0),
+            ], axis=1)
             emit = jnp.where(emitting, nxt, -1)
-            return (cache, st, mon, stats), (emit, emitting)
+            return (cache, st, mon, stats, swrites), (emit, emitting)
 
         def run(params, cache, st, mon, prompts, enabled):
             stats0 = jnp.zeros((4,), jnp.int32)
-            (cache, st, mon, stats), (emits, ems) = lax.scan(
+            sw0 = jnp.zeros((cfg.n_slots, 3), jnp.int32)
+            (cache, st, mon, stats, swrites), (emits, ems) = lax.scan(
                 lambda cry, x: step(params, prompts, enabled, cry, x),
-                (cache, st, mon, stats0),
+                (cache, st, mon, stats0, sw0),
                 None,
                 length=cfg.segment_len,
             )
             if ring:
                 cache = PG.drain_ring(cache, use_kernel=cfg.drain_kernel)
-            return cache, st, mon, stats, emits, ems
+            return cache, st, mon, stats, swrites, emits, ems
 
         return jax.jit(run)
 
@@ -577,6 +622,45 @@ class BatchedServeEngine:
                 self.params, cache, chunk, s0, media=m)
         return logits, cache
 
+    def _resolve_params(self, req) -> SamplingParams:
+        """The request's effective SamplingParams: request > engine
+        default > legacy ``greedy`` flag (for an unset temperature)."""
+        return SMP.resolve(req.params, self.cfg.default_params,
+                           self.cfg.greedy)
+
+    def _admit_sampling(self, slot_arr, reqs, plist) -> dict:
+        """Per-slot sampling-state updates for a group admission: the
+        resolved param fields and each request's PRNG key (explicit seed
+        or the legacy (sample_seed, req_id) derivation). Key derivation
+        is ONE vmapped dispatch per admission — per-request Python
+        dispatches would dominate a small reduced-model serve pass."""
+        keys = jax.random.key_data(jax.vmap(
+            lambda i: jax.random.fold_in(self._base_key, i)
+        )(jnp.asarray([r.req_id for r in reqs], jnp.int32)))
+        seeded = [(i, p.seed) for i, p in enumerate(plist)
+                  if p.seed is not None]
+        if seeded:
+            # explicit seeds are the rare case: per-request derive_key
+            # keeps ONE definition of the seed->key mapping (the common
+            # unseeded path above stays a single vmapped dispatch)
+            rows = jnp.asarray([i for i, _ in seeded], jnp.int32)
+            skeys = jnp.stack([SMP.derive_key(self._base_key, 0, s)
+                               for _, s in seeded])
+            keys = keys.at[rows].set(jax.random.key_data(skeys))
+        stop = np.asarray(
+            [SMP.stop_table(p, self.cfg.eos_id) for p in plist], np.int32)
+        st = self.slots
+        return dict(
+            key=st.key.at[slot_arr].set(keys),
+            temperature=st.temperature.at[slot_arr].set(jnp.asarray(
+                [p.temperature for p in plist], jnp.float32)),
+            top_k=st.top_k.at[slot_arr].set(jnp.asarray(
+                [p.top_k for p in plist], jnp.int32)),
+            top_p=st.top_p.at[slot_arr].set(jnp.asarray(
+                [p.top_p for p in plist], jnp.float32)),
+            stop=st.stop.at[slot_arr].set(jnp.asarray(stop)),
+        )
+
     def _record_first_tokens(self, rids) -> None:
         if self._t_serve0 is None:
             self._t_serve0 = time.perf_counter()
@@ -600,30 +684,30 @@ class BatchedServeEngine:
             table[i, : len(b)] = b
         self.cache["page_table"] = self.cache["page_table"].at[
             slot_arr].set(jnp.asarray(table))
-        keys = jax.random.key_data(jax.vmap(
-            lambda i: jax.random.fold_in(self._base_key, i)
-        )(jnp.asarray([r.req_id for r in reqs], jnp.int32)))
+        plist = [self._resolve_params(r) for r in reqs]
         st = self.slots
-        self.slots = SlotState(
+        self.slots = st._replace(
             phase=st.phase.at[slot_arr].set(PHASE_PREFILL),
             token=st.token.at[slot_arr].set(0),
             pos=st.pos.at[slot_arr].set(0),
             done=st.done.at[slot_arr].set(False),
             remaining=st.remaining.at[slot_arr].set(
-                jnp.asarray([r.max_new for r in reqs], jnp.int32)),
-            key=st.key.at[slot_arr].set(keys),
+                jnp.asarray([p.max_tokens for p in plist], jnp.int32)),
             req_id=st.req_id.at[slot_arr].set(
                 jnp.asarray([r.req_id for r in reqs], jnp.int32)),
             plen=st.plen.at[slot_arr].set(
                 jnp.asarray([r.prompt_len for r in reqs], jnp.int32)),
+            **self._admit_sampling(slot_arr, reqs, plist),
         )
-        for slot, req, b in zip(slots, reqs, blocks):
+        for slot, req, p, b in zip(slots, reqs, plist, blocks):
             self._occupied[slot] = True
             self._slot_req[slot] = req.req_id
             self._slot_plen[slot] = req.prompt_len
-            self._slot_max_new[slot] = req.max_new
+            self._slot_max_new[slot] = p.max_tokens
             self._slot_pages[slot] = len(b)
             self.outputs[req.req_id] = []
+            self.req_params[req.req_id] = p
+            self.req_writes[req.req_id] = np.zeros((3,), np.int64)
         self.stats["admitted"] += len(reqs)
 
     def _admit_group(self, slots: List[int], reqs: List[Any],
@@ -674,36 +758,37 @@ class BatchedServeEngine:
         # prefill writes are dense/contiguous -> offload path; they still
         # heat the page counters (the paper's frequency monitor sees every
         # write that lands in a region)
-        self.mon_state = self.decision.monitor.update(
-            self.mon_state, jnp.asarray(regions, jnp.int32))
+        self.mon_state = self.decision.heat(self.mon_state, regions)
 
+        plist = [self._resolve_params(r) for r in reqs]
         t0s = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        keys = jax.random.key_data(jax.vmap(
-            lambda i: jax.random.fold_in(self._base_key, i)
-        )(jnp.asarray([r.req_id for r in reqs], jnp.int32)))
-        rem = np.asarray([r.max_new - 1 for r in reqs], np.int32)
-        done0 = rem <= 0
-        if cfg.eos_id is not None:
-            done0 = done0 | (t0s == cfg.eos_id)
+        rem = np.asarray([p.max_tokens - 1 for p in plist], np.int32)
+        stop_rows = np.asarray(
+            [SMP.stop_table(p, cfg.eos_id) for p in plist], np.int32)
+        done0 = (rem <= 0) | np.any(stop_rows == t0s[:, None], axis=1)
         st = self.slots
-        self.slots = SlotState(
+        self.slots = st._replace(
             phase=st.phase.at[slot_arr].set(PHASE_DECODE),
             token=st.token.at[slot_arr].set(jnp.asarray(t0s)),
             pos=st.pos.at[slot_arr].set(plen),
             done=st.done.at[slot_arr].set(jnp.asarray(done0)),
             remaining=st.remaining.at[slot_arr].set(jnp.asarray(rem)),
-            key=st.key.at[slot_arr].set(keys),
             req_id=st.req_id.at[slot_arr].set(
                 jnp.asarray([r.req_id for r in reqs], jnp.int32)),
             plen=st.plen.at[slot_arr].set(plen),
+            **self._admit_sampling(slot_arr, reqs, plist),
         )
-        for slot, req, t0, b in zip(slots, reqs, t0s, blocks):
+        for slot, req, p, t0, b in zip(slots, reqs, plist, t0s, blocks):
             self._occupied[slot] = True
             self._slot_req[slot] = req.req_id
             self._slot_plen[slot] = req.prompt_len
-            self._slot_max_new[slot] = req.max_new
+            self._slot_max_new[slot] = p.max_tokens
             self._slot_pages[slot] = 0 if b is None else len(b)
             self.outputs[req.req_id] = [int(t0)]
+            self.req_params[req.req_id] = p
+            # admission-time prefill rows are bulk/offload writes
+            self.req_writes[req.req_id] = np.asarray(
+                [0, 0, req.prompt_len], np.int64)
         self._record_first_tokens([r.req_id for r in reqs])
         self.stats["admitted"] += g
 
@@ -789,19 +874,33 @@ class BatchedServeEngine:
         if enabled is None:
             enabled = np.ones((self.cfg.n_slots,), bool)
         enabled_j = jnp.asarray(enabled)
+        # static sampler specialization: the cheapest variant covering
+        # the OCCUPANTS' params (a slot forced into a richer variant than
+        # its own params need produces identical tokens — the variants
+        # differ only in traced work, never in results)
+        mode = SMP.required_mode(
+            [self.req_params[self._slot_req[s]]
+             for s in range(self.cfg.n_slots) if self._occupied[s]])
         if self._mixed_phase_pending():
+            self._mixed_fn = self._mixed_fns.get(mode)
             if self._mixed_fn is None:
-                self._mixed_fn = self._build_mixed_segment()
-            self.cache, self.slots, self.mon_state, stats, emits, acts = (
+                self._mixed_fn = self._build_mixed_segment(mode)
+                self._mixed_fns[mode] = self._mixed_fn
+            (self.cache, self.slots, self.mon_state, stats, swrites,
+             emits, acts) = (
                 self._mixed_fn(self.params, self.cache, self.slots,
                                self.mon_state, self.prompts, enabled_j))
         else:
+            self._segment_fn = self._segment_fns.get(mode)
             if self._segment_fn is None:
-                self._segment_fn = self._build_segment()
-            self.cache, self.slots, self.mon_state, stats, emits, acts = (
+                self._segment_fn = self._build_segment(mode)
+                self._segment_fns[mode] = self._segment_fn
+            (self.cache, self.slots, self.mon_state, stats, swrites,
+             emits, acts) = (
                 self._segment_fn(self.params, self.cache, self.slots,
                                  self.mon_state, enabled_j))
         emits, acts = np.asarray(emits), np.asarray(acts)
+        swrites = np.asarray(swrites)
         d, s, dr, pf = (int(x) for x in stats)
         self.stats["direct_writes"] += d
         self.stats["staged_writes"] += s
@@ -811,9 +910,10 @@ class BatchedServeEngine:
         first = []
         for slot in range(self.cfg.n_slots):
             if self._occupied[slot]:
+                rid = self._slot_req[slot]
+                self.req_writes[rid] += swrites[slot]
                 toks = emits[acts[:, slot], slot]
                 if len(toks):
-                    rid = self._slot_req[slot]
                     if not self.outputs[rid]:
                         first.append(rid)
                     self.outputs[rid].extend(int(t) for t in toks)

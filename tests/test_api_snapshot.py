@@ -1,0 +1,77 @@
+"""Public-API snapshot: the exported symbols AND call signatures of
+``repro.serve`` and ``repro.core.paths`` are committed
+(``tests/api_snapshot.txt``) and diffed here — an unreviewed change to
+the serving front door or the write-path registry fails CI instead of
+silently breaking downstream configs.
+
+Refresh after an INTENTIONAL surface change::
+
+    PYTHONPATH=src python tests/test_api_snapshot.py --update
+"""
+import importlib
+import inspect
+import os
+import sys
+
+SNAPSHOT_MODULES = ("repro.serve", "repro.core.paths")
+SNAPSHOT_FILE = os.path.join(os.path.dirname(__file__), "api_snapshot.txt")
+
+
+def _describe(prefix: str, obj) -> list:
+    lines = []
+    if inspect.isclass(obj):
+        try:
+            lines.append(f"{prefix}{inspect.signature(obj)}")
+        except (ValueError, TypeError):
+            lines.append(f"{prefix}(...)")
+        for name, member in sorted(vars(obj).items()):
+            if name.startswith("_"):
+                continue
+            if isinstance(member, (classmethod, staticmethod)):
+                fn = member.__func__
+                lines.append(f"{prefix}.{name}{inspect.signature(fn)}")
+            elif inspect.isfunction(member):
+                lines.append(f"{prefix}.{name}{inspect.signature(member)}")
+            elif isinstance(member, property):
+                lines.append(f"{prefix}.{name} <property>")
+    elif callable(obj):
+        lines.append(f"{prefix}{inspect.signature(obj)}")
+    else:
+        lines.append(f"{prefix} = {obj!r}")
+    return lines
+
+
+def current_snapshot() -> str:
+    lines = []
+    for modname in SNAPSHOT_MODULES:
+        mod = importlib.import_module(modname)
+        for name in sorted(mod.__all__):
+            lines.extend(_describe(f"{modname}.{name}", getattr(mod, name)))
+    return "\n".join(lines) + "\n"
+
+
+def test_public_api_matches_snapshot():
+    with open(SNAPSHOT_FILE) as f:
+        committed = f.read()
+    current = current_snapshot()
+    if current != committed:
+        import difflib
+
+        diff = "\n".join(difflib.unified_diff(
+            committed.splitlines(), current.splitlines(),
+            "api_snapshot.txt (committed)", "current", lineterm=""))
+        raise AssertionError(
+            "public API surface drifted from tests/api_snapshot.txt.\n"
+            "If intentional, refresh with:\n"
+            "    PYTHONPATH=src python tests/test_api_snapshot.py --update\n"
+            f"{diff}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    if "--update" in sys.argv:
+        with open(SNAPSHOT_FILE, "w") as f:
+            f.write(current_snapshot())
+        print(f"wrote {SNAPSHOT_FILE}")
+    else:
+        print(current_snapshot(), end="")

@@ -1,12 +1,17 @@
 """Data pipeline tests: determinism, host sharding, restart, memmap,
-request-queue ordering."""
+request-queue ordering (incl. SamplingParams carriage through
+synthetic_requests and skip-ahead admission)."""
+import warnings
+
 import numpy as np
+import pytest
 
 from repro.data import (
     DataConfig,
     MemmapSource,
     Pipeline,
     RequestQueue,
+    SamplingParams,
     SyntheticSource,
     synthetic_requests,
 )
@@ -21,6 +26,77 @@ def test_request_queue_pop_at_preserves_relative_order():
     assert q.pop_at(0).req_id == 0          # head pop still works
     assert q.pop().req_id == 1
     assert [q.at(i).req_id for i in range(len(q))] == [3, 4]
+
+
+def test_queue_carries_sampling_params():
+    """submit/at/pop_at carry SamplingParams untouched; the legacy
+    max_new argument overrides max_tokens; params-less submits still
+    need a budget."""
+    q = RequestQueue()
+    p = SamplingParams(temperature=0.7, top_k=5, max_tokens=9, seed=3)
+    q.submit(np.arange(4, dtype=np.int32), params=p)
+    q.submit(np.arange(4, dtype=np.int32), 3, params=p)   # max_new wins
+    q.submit(np.arange(4, dtype=np.int32), 3)
+    assert q.at(0).params == p and q.at(0).max_new == 9
+    assert q.at(1).params.max_tokens == 3
+    assert q.at(1).params.temperature == 0.7              # rest untouched
+    assert q.at(2).params.max_tokens == 3
+    assert q.at(2).params.temperature is None             # engine default
+    assert q.pop_at(1).params.max_tokens == 3             # skip-ahead keeps params
+    assert q.pop().params == p
+    with pytest.raises(ValueError):
+        q.submit(np.arange(4, dtype=np.int32))            # no budget at all
+
+
+def test_synthetic_requests_carry_params_cycled():
+    plist = [SamplingParams(max_tokens=4, temperature=0.0, seed=1),
+             SamplingParams(max_tokens=6, temperature=1.1, seed=2)]
+    q = synthetic_requests(5, 8, vocab=97, max_new=3, seed=1, params=plist)
+    got = [q.at(i).params for i in range(len(q))]
+    assert got == [plist[0], plist[1], plist[0], plist[1], plist[0]]
+    # prompts are independent of the params mix
+    q_plain = synthetic_requests(5, 8, vocab=97, max_new=3, seed=1)
+    for i in range(5):
+        np.testing.assert_array_equal(q.at(i).prompt, q_plain.at(i).prompt)
+        assert q_plain.at(i).params.max_tokens == 3
+
+
+def test_skip_ahead_admission_keeps_same_size_fifo_with_params():
+    """Regression: requests of EQUAL footprint but different
+    SamplingParams must admit strictly FIFO — the skip-ahead scan may
+    reorder only when a head request genuinely does not fit."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import BatchConfig, BatchedServeEngine
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    mparams = model.init(jax.random.key(0), 32)
+    plist = [SamplingParams(max_tokens=4, temperature=0.0),
+             SamplingParams(max_tokens=4, temperature=1.2, seed=9),
+             SamplingParams(max_tokens=4, top_k=3, seed=1)]
+    queue = synthetic_requests(6, 8, cfg.vocab, 4, seed=2, params=plist)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = BatchedServeEngine(model, mparams, BatchConfig(
+            max_seq=32, n_slots=2, segment_len=2, page_size=4,
+            n_blocks=6))  # room for exactly the two live slots
+    admitted = []
+    for _ in range(200):
+        eng.retire_done()
+        eng.admit(queue)
+        for s in range(eng.cfg.n_slots):
+            rid = eng._slot_req[s]
+            if eng._occupied[s] and rid not in admitted:
+                admitted.append(rid)
+        if not any(eng._occupied):
+            break
+        eng.run_segment()
+    # same-size stream: admission order IS submission order
+    assert sorted(admitted) == admitted == list(range(6))
+    assert all(len(eng.outputs[r]) == 4 for r in range(6))
 
 
 def test_synthetic_requests_mixed_prompt_lengths():

@@ -1,0 +1,214 @@
+"""WritePath / RoutingPolicy registries: name resolution (loud errors
+listing what IS registered), capability negotiation (incompatible
+path+policy+layout combos refuse construction), and third-party
+extension (a toy WritePath registered in-test round-trips through the
+batched serving engine)."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.decision import DecisionModule
+from repro.core.paths import (
+    CAP_BULK_PIN,
+    CAP_DIRECT,
+    CAP_STAGED,
+    WritePath,
+    available_paths,
+    build_decision,
+    get_path,
+    negotiate,
+    register_path,
+)
+from repro.core.policy import (
+    AlwaysUnload,
+    FrequencyPolicy,
+    available_policies,
+    get_policy_factory,
+    register_policy,
+)
+from repro.data import synthetic_requests
+from repro.models import build_model
+from repro.serve import BatchConfig, BatchedServeEngine, Engine, EngineConfig
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("segment_len", 4)
+    kw.setdefault("page_size", 8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return BatchedServeEngine(model, params, BatchConfig(**kw))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), 64)
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# name resolution
+# ---------------------------------------------------------------------------
+
+def test_builtin_names_are_registered():
+    assert {"direct", "staged", "adaptive"} <= set(available_paths())
+    assert {"always-offload", "always-unload", "hint", "frequency",
+            "hysteresis"} <= set(available_policies())
+
+
+def test_unknown_path_name_lists_registered():
+    with pytest.raises(ValueError) as exc:
+        get_path("bogus-path")
+    msg = str(exc.value)
+    for name in ("direct", "staged", "adaptive"):
+        assert name in msg
+
+
+def test_unknown_policy_name_lists_registered():
+    with pytest.raises(ValueError) as exc:
+        get_policy_factory("bogus-policy")
+    msg = str(exc.value)
+    for name in ("always-offload", "frequency", "hysteresis"):
+        assert name in msg
+
+
+def test_engine_config_surfaces_registry_errors(setup):
+    _, model, params = setup
+    with pytest.raises(ValueError, match="registered paths"):
+        _engine(model, params, path="bogus-path")
+    with pytest.raises(ValueError, match="registered policies"):
+        _engine(model, params, path="adaptive", policy="bogus-policy")
+
+
+def test_double_registration_is_refused():
+    with pytest.raises(ValueError, match="already registered"):
+        register_path(get_path("direct"))
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("frequency", lambda **kw: None)
+
+
+def test_path_validates_its_own_capabilities():
+    with pytest.raises(ValueError, match="unknown capabilities"):
+        WritePath(name="x", capabilities=frozenset({"warp"}),
+                  uses_ring=False, default_policy="always-offload")
+    with pytest.raises(ValueError, match="uses_ring"):
+        WritePath(name="x", capabilities=frozenset({CAP_STAGED}),
+                  uses_ring=False, default_policy="always-unload")
+
+
+# ---------------------------------------------------------------------------
+# capability negotiation
+# ---------------------------------------------------------------------------
+
+def test_unloading_policy_needs_staged_capability():
+    with pytest.raises(ValueError, match="'staged' capability"):
+        build_decision("direct", "frequency", n_regions=8)
+    with pytest.raises(ValueError, match="'staged' capability"):
+        build_decision("direct", "always-unload", n_regions=8)
+
+
+def test_offloading_policy_needs_direct_capability():
+    only_staged = WritePath(
+        name="pure-staged", capabilities=frozenset({CAP_STAGED}),
+        uses_ring=True, default_policy="always-unload")
+    negotiate(only_staged, AlwaysUnload())  # unload-only: fine
+    with pytest.raises(ValueError, match="lacks the 'direct'"):
+        negotiate(only_staged, FrequencyPolicy(threshold=1))
+    # bulk-pin does NOT substitute for direct on scattered writes: the
+    # built-in staged path refuses adaptive-routing policies
+    with pytest.raises(ValueError, match="lacks the 'direct'"):
+        build_decision("staged", "frequency", n_regions=8)
+
+
+def test_lanes_layout_rejects_staged_capable_paths(setup):
+    _, model, params = setup
+    for path in ("staged", "adaptive"):
+        with pytest.raises(ValueError, match="lanes.*direct-only"):
+            _engine(model, params, kv_layout="lanes", path=path)
+    # and through the legacy write_mode alias on an SWA (lanes-only) arch
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    swa_model = build_model(cfg)
+    swa_params = swa_model.init(jax.random.key(0), 32)
+    with pytest.raises(ValueError, match="direct-only"):
+        _engine(swa_model, swa_params, write_mode="staged")
+
+
+def test_chunked_needs_bulk_pin():
+    no_bulk = WritePath(
+        name="no-bulk", capabilities=frozenset({CAP_DIRECT, CAP_STAGED}),
+        uses_ring=True, default_policy="frequency")
+    negotiate(no_bulk, FrequencyPolicy(threshold=1), chunked=False)
+    with pytest.raises(ValueError, match="bulk-pin"):
+        negotiate(no_bulk, FrequencyPolicy(threshold=1), chunked=True)
+
+
+def test_from_names_builds_working_modules():
+    for path, policy in (("direct", None), ("staged", None),
+                         ("adaptive", None), ("adaptive", "hysteresis")):
+        dm = DecisionModule.from_names(policy, path=path, n_regions=8,
+                                       hot_threshold=3)
+        state = dm.init_state()
+        from repro.core.types import make_write_batch
+        import jax.numpy as jnp
+        unload, state, stats = dm(
+            state, make_write_batch(jnp.asarray([1, 2], jnp.int32)))
+        assert unload.shape == (2,)
+
+
+def test_old_constructors_warn_deprecation(setup):
+    """The legacy entry points are shims for one release: constructing
+    them warns, pointing at Engine.from_config (the facade constructs
+    them internally with the warning suppressed)."""
+    from repro.serve import ServeConfig, ServeEngine
+
+    _, model, params = setup
+    with pytest.warns(DeprecationWarning, match="Engine.from_config"):
+        BatchedServeEngine(model, params, BatchConfig(max_seq=32, n_slots=1))
+    with pytest.warns(DeprecationWarning, match="Engine.from_config"):
+        ServeEngine(model, params, ServeConfig(max_seq=32))
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error", DeprecationWarning)
+        Engine.from_config(EngineConfig(max_seq=32, n_slots=1),
+                           model, params)  # facade itself must not warn
+
+
+# ---------------------------------------------------------------------------
+# third-party extension round-trip
+# ---------------------------------------------------------------------------
+
+def test_toy_write_path_round_trips_through_the_engine(setup):
+    """A WritePath registered by a third party is constructible by name
+    and serves bit-identically to the built-in with the same mechanics
+    (the path declares its contract; the engine supplies the machinery)."""
+    cfg, model, params = setup
+    name = "toy-ring"
+    if name not in available_paths():
+        register_path(WritePath(
+            name=name,
+            capabilities=frozenset({CAP_DIRECT, CAP_STAGED, CAP_BULK_PIN}),
+            uses_ring=True,
+            default_policy="always-unload",
+            description="test-registered clone of the staged mechanics",
+        ))
+    queue = lambda: synthetic_requests(4, 9, cfg.vocab, 6, seed=3)  # noqa: E731
+    out_toy = _engine(model, params, path=name).serve(queue())
+    out_ref = _engine(model, params, write_mode="staged").serve(queue())
+    assert set(out_toy) == set(out_ref)
+    for r in out_toy:
+        np.testing.assert_array_equal(out_toy[r], out_ref[r])
+    # and through the Engine facade front door
+    eng = Engine.from_config(EngineConfig(
+        max_seq=32, n_slots=2, segment_len=4, page_size=8, path=name),
+        model, params)
+    out_face = eng.serve(queue())
+    for r in out_face:
+        np.testing.assert_array_equal(out_face[r], out_ref[r])
+    assert eng.scheduler.path.name == name
+    assert eng.scheduler.uses_ring
