@@ -8,8 +8,10 @@ Rules (direction-aware, per metric key):
   value drops more than ``--tolerance`` (default 15%) below baseline.
 * ``*_ms`` (TTFT latencies)    lower is better — fail when the current
   value rises more than ``--tolerance`` above baseline.
-* ``bit_identical``            must be true — any sampling/parity drift
-  fails outright (correctness, not a tolerance).
+* ``bit_identical`` / ``parity_ok``  must be true — any sampling/parity
+  drift fails outright (correctness, not a tolerance).
+  (``parity_ok`` is the decode_kernel row's fused-vs-reference check:
+  fp32 ulp-level agreement per DESIGN.md §7.)
 * a gated metric present in the baseline but missing from the current
   report fails (schema drift would otherwise silently drop coverage).
 
@@ -57,12 +59,13 @@ LOWER_BETTER = ("_ms",)  # every *_ms metric here is a latency
 REFERENCE_KEYS = frozenset({
     "sequential_tok_s", "blocking_tok_s",
     "blocking_ttft_ms", "blocking_ttft_p95_ms",
+    "reference_step_ms", "reference_chunk_ms",
 })
 
 
 def classify(key: str):
     """'up' (higher better) | 'down' (lower better) | 'bool' | None."""
-    if key == "bit_identical":
+    if key in ("bit_identical", "parity_ok"):
         return "bool"
     for suf in HIGHER_BETTER:
         if key.endswith(suf):

@@ -33,6 +33,7 @@ Built-ins mirror the legacy ``write_mode`` strings: ``direct`` /
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, Optional, Tuple, Union
 
 from .decision import DecisionModule
@@ -184,6 +185,56 @@ def negotiate(path: WritePath, policy, *, layout: Optional[str] = None,
             f"capability (capabilities: {sorted(path.capabilities)})")
 
 
+ATTN_FUSED = "fused"
+ATTN_REFERENCE = "reference"
+_KNOWN_ATTN = ("auto", ATTN_FUSED, ATTN_REFERENCE)
+
+
+def resolve_attention(attention: str = "auto", *,
+                      layout: Optional[str] = None,
+                      arch_paged_capable: bool = True,
+                      backend: Optional[str] = None) -> str:
+    """Negotiate the decode-attention implementation, mirroring
+    :func:`negotiate`'s loud-error contract.
+
+    ``fused`` is the ``flash_decode_paged`` read kernel: a scalar-prefetch
+    page-table walk over the physical pool with the staging ring as a
+    second softmax source. It REQUIRES the paged layout (the dense-lane
+    layout has no page table to walk) — requesting it elsewhere is a
+    config error, not a silent fallback. ``auto`` picks fused wherever the
+    kernel compiles natively (any non-CPU backend serving a paged cache)
+    and the reference jnp path on CPU, where interpret mode is the
+    validation lane, not a serving path. CI sets ``REPRO_ATTENTION=fused``
+    to force the kernel (interpret mode) through ``auto`` configs so CPU
+    jobs exercise the fused read path end to end.
+    """
+    if attention not in _KNOWN_ATTN:
+        raise ValueError(
+            f"unknown attention implementation {attention!r} "
+            f"(known: {list(_KNOWN_ATTN)})")
+    paged = layout == "paged" and arch_paged_capable
+    if attention == ATTN_FUSED and not paged:
+        raise ValueError(
+            f"attention='fused' needs the paged KV layout to walk "
+            f"(layout={layout!r}, paged-capable={arch_paged_capable}); "
+            f"use kv_layout='paged' on a dense decoder arch, or "
+            f"attention='reference'")
+    if attention != "auto":
+        return attention
+    if not paged:
+        return ATTN_REFERENCE
+    env = os.environ.get("REPRO_ATTENTION")
+    if env is not None:
+        return resolve_attention(env, layout=layout,
+                                 arch_paged_capable=arch_paged_capable,
+                                 backend=backend)
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return ATTN_FUSED if backend != "cpu" else ATTN_REFERENCE
+
+
 def build_decision(path: Union[str, WritePath] = "direct",
                    policy: Optional[str] = None, *,
                    n_regions: int,
@@ -216,7 +267,8 @@ def build_decision(path: Union[str, WritePath] = "direct",
 
 __all__ = [
     "CAP_DIRECT", "CAP_STAGED", "CAP_BULK_PIN",
+    "ATTN_FUSED", "ATTN_REFERENCE",
     "WritePath", "register_path", "get_path", "available_paths",
     "DIRECT", "STAGED", "ADAPTIVE",
-    "negotiate", "build_decision",
+    "negotiate", "resolve_attention", "build_decision",
 ]

@@ -6,16 +6,27 @@ touches, each with a jit wrapper (ops.py) and a pure-jnp oracle (ref.py):
   cms              count-min-sketch monitor update/query (decision hot path)
   flash_attention  VMEM-tiled online-softmax prefill attention (GQA/SWA)
   flash_decode     one-token attention over long KV caches (decode shapes)
+  flash_decode_paged  fused paged decode: scalar-prefetched page-table walk
+                   + staging-ring overlay + SDPA in one pass (read-side twin
+                   of staged_scatter)
 
 Kernels target TPU (BlockSpecs sized for VMEM, 128-lane tiles) and are
 validated on CPU with interpret=True against the oracles.
 """
-from .ops import cms_query, cms_update, flash_attention, flash_decode, staged_scatter
+from .ops import (
+    cms_query,
+    cms_update,
+    flash_attention,
+    flash_decode,
+    flash_decode_paged,
+    staged_scatter,
+)
 
 __all__ = [
     "cms_query",
     "cms_update",
     "flash_attention",
     "flash_decode",
+    "flash_decode_paged",
     "staged_scatter",
 ]

@@ -67,6 +67,143 @@ def _decode_kernel(
         o_ref[0, 0] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
 
 
+def _paged_kernel(
+    # scalar prefetch
+    tab_ref,               # int32 [B, P] physical block ids (clamped >= 0)
+    # inputs
+    q_ref,                 # [1, C, 1, D]
+    k_ref,                 # [1, ps, 1, D] one physical KV block
+    v_ref,                 # [1, ps, 1, D]
+    m_ref,                 # int32 [1, C, ps] view-validity for this block
+    *rest,                 # (+ ring refs) then o_ref, then scratch
+    ps, n_pages, scale, ring,
+):
+    """Grid (B, Hq, P): walk the page table for one (slot, head) pair.
+
+    Each step scores one physical block straight out of the pool (the
+    BlockSpec below indexes the pool through the scalar-prefetched table —
+    no gathered copy ever lands in HBM) and stashes scores/values in VMEM.
+    The LAST step appends the staging-ring lanes as a second KV source and
+    runs ONE full-width softmax + weighted sum, replicating the jnp
+    reference's op ORDER exactly: fused and reference outputs agree to
+    fp32 ulp precision (~1e-7 abs) and emit identical greedy tokens. They
+    are not bit-identical — XLA tiles the per-page [C, ps] score dots
+    differently from the reference's full-width einsum, which is enough to
+    reassociate the fp32 sums (see DESIGN.md §7 for the parity contract
+    and the online-rescaling trade-off).
+    """
+    if ring:
+        rk_ref, rv_ref, rm_ref, o_ref, s_ref, vb_ref = rest
+    else:
+        o_ref, s_ref, vb_ref = rest
+    j = pl.program_id(2)
+
+    q = q_ref[0, :, 0]       # [C, D]
+    k = k_ref[0, :, 0]       # [ps, D]
+    v = v_ref[0, :, 0]
+    ok = m_ref[0] != 0       # [C, ps]
+
+    s = lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [C, ps]
+    s_ref[:, pl.ds(j * ps, ps)] = jnp.where(ok, s, _NEG_INF)
+    vb_ref[pl.ds(j * ps, ps), :] = v.astype(vb_ref.dtype)
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        scores = s_ref[...]      # [C, P*ps] fp32
+        vals = vb_ref[...]       # [P*ps, D]
+        if ring:
+            rk = rk_ref[0, :, 0]        # [R, D]
+            rv = rv_ref[0, :, 0]
+            rok = rm_ref[0] != 0        # [R]
+            sr = lax.dot_general(
+                q, rk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale                    # [C, R]
+            scores = jnp.concatenate(
+                [scores, jnp.where(rok[None, :], sr, _NEG_INF)], axis=1)
+            vals = jnp.concatenate([vals, rv.astype(vals.dtype)], axis=0)
+        probs = jax.nn.softmax(scores, axis=-1)          # fp32
+        out = lax.dot_general(
+            probs.astype(vals.dtype), vals, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,         # [B, C, Hq, D] query slab (C=1 for step decode)
+    pages_k: jnp.ndarray,   # [n_blocks, ps, Hkv, D] physical pool (one layer)
+    pages_v: jnp.ndarray,   # [n_blocks, ps, Hkv, D]
+    blocks: jnp.ndarray,    # int32 [B, P] per-slot physical block ids (>= 0)
+    view_ok: jnp.ndarray,   # bool [B, C, P*ps] paged-view validity mask
+    ring_k: jnp.ndarray | None = None,   # [B, R, Hkv, D] staging-ring lanes
+    ring_v: jnp.ndarray | None = None,
+    ring_ok: jnp.ndarray | None = None,  # bool [B, R] lane validity
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused paged-attention decode: page-table walk + ring overlay + SDPA.
+
+    The scalar-prefetched ``blocks`` table drives the pool BlockSpecs, so
+    each grid step reads its [ps, D] KV tile directly from the physical
+    pool; undrained staging-ring lanes join the same softmax as a second
+    source. Nothing is gathered or overlaid in HBM first — the read-side
+    twin of ``staged_scatter``. Returns [B, C, Hq, D].
+    """
+    b, c, hq, d = q.shape
+    ps, hkv = pages_k.shape[1], pages_k.shape[2]
+    n_pages = blocks.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert view_ok.shape == (b, c, n_pages * ps), (view_ok.shape, n_pages, ps)
+    ring = ring_k is not None
+    if ring:
+        r = ring_k.shape[1]
+        assert ring_ok is not None and ring_ok.shape == (b, r)
+
+    grid = (b, hq, n_pages)
+    in_specs = [
+        pl.BlockSpec((1, c, 1, d), lambda b_, h, j, tab: (b_, 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, d),
+                     lambda b_, h, j, tab: (tab[b_, j], 0, h // group, 0)),
+        pl.BlockSpec((1, ps, 1, d),
+                     lambda b_, h, j, tab: (tab[b_, j], 0, h // group, 0)),
+        pl.BlockSpec((1, c, ps), lambda b_, h, j, tab: (b_, 0, j)),
+    ]
+    args = [q, pages_k, pages_v, view_ok.astype(jnp.int32)]
+    if ring:
+        in_specs += [
+            pl.BlockSpec((1, r, 1, d),
+                         lambda b_, h, j, tab: (b_, 0, h // group, 0)),
+            pl.BlockSpec((1, r, 1, d),
+                         lambda b_, h, j, tab: (b_, 0, h // group, 0)),
+            pl.BlockSpec((1, r), lambda b_, h, j, tab: (b_, 0)),
+        ]
+        args += [ring_k, ring_v, ring_ok.astype(jnp.int32)]
+
+    fn = pl.pallas_call(
+        functools.partial(
+            _paged_kernel, ps=ps, n_pages=n_pages, scale=d ** -0.5, ring=ring,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, c, 1, d), lambda b_, h, j, tab: (b_, 0, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((c, n_pages * ps), jnp.float32),
+                pltpu.VMEM((n_pages * ps, d), pages_v.dtype),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )
+    return fn(blocks, *args)
+
+
 def flash_decode(
     q: jnp.ndarray,        # [B, Hq, D]
     k: jnp.ndarray,        # [B, T, Hkv, D]

@@ -18,6 +18,7 @@ from .cms import cms_query as _cms_query_kernel
 from .cms import cms_update as _cms_update_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
 from .flash_decode import flash_decode as _flash_decode_kernel
+from .flash_decode import flash_decode_paged as _flash_decode_paged_kernel
 from .staged_scatter import staged_scatter as _staged_scatter_kernel
 
 
@@ -87,3 +88,23 @@ def flash_decode(q, k, v, kv_mask, impl: str = "auto", block_k: int = 512):
     while k.shape[1] % bk:
         bk //= 2
     return _flash_decode_kernel(q, k, v, kv_mask, block_k=bk, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def flash_decode_paged(q, pages_k, pages_v, blocks, view_ok,
+                       ring_k=None, ring_v=None, ring_ok=None,
+                       impl: str = "auto"):
+    """Fused paged decode: page-table walk + staging-ring overlay + SDPA.
+
+    Unlike ``flash_decode``, ``auto`` does NOT silently fall back to the
+    oracle on CPU: which implementation serves decode is a negotiated
+    engine capability (``core.paths.resolve_attention``), so by the time
+    this wrapper runs the caller has already chosen the kernel — on CPU it
+    runs in interpret mode (the parity/validation lane).
+    """
+    if impl == "ref":
+        return ref.flash_decode_paged_ref(
+            q, pages_k, pages_v, blocks, view_ok, ring_k, ring_v, ring_ok)
+    return _flash_decode_paged_kernel(
+        q, pages_k, pages_v, blocks, view_ok, ring_k, ring_v, ring_ok,
+        interpret=_on_cpu())

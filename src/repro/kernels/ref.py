@@ -102,6 +102,48 @@ def flash_attention_ref(
 # ---------------------------------------------------------------------------
 
 
+def flash_decode_paged_ref(
+    q: jnp.ndarray,        # [B, C, Hq, D]
+    pages_k: jnp.ndarray,  # [n_blocks, ps, Hkv, D] physical pool (one layer)
+    pages_v: jnp.ndarray,
+    blocks: jnp.ndarray,   # int32 [B, P] physical block ids (clamped >= 0)
+    view_ok: jnp.ndarray,  # bool [B, C, P*ps]
+    ring_k: jnp.ndarray | None = None,   # [B, R, Hkv, D]
+    ring_v: jnp.ndarray | None = None,
+    ring_ok: jnp.ndarray | None = None,  # bool [B, R]
+) -> jnp.ndarray:
+    """Oracle for the fused paged+ring decode kernel: gather the per-slot
+    view through the page table, append the staging-ring lanes, then the
+    exact ``layers._sdpa_once`` op order (fp32 logits -> mask -> softmax ->
+    dtype cast -> weighted sum) so the kernel can be held to ulp-level
+    fp32 equality (same op order; XLA's shape-dependent GEMM tiling keeps
+    the two graphs ~1e-7 apart — DESIGN.md §7)."""
+    b, c, hq, d = q.shape
+    ps, hkv = pages_k.shape[1], pages_k.shape[2]
+    rows = (blocks[:, :, None] * ps
+            + jnp.arange(ps, dtype=blocks.dtype)[None, None, :]).reshape(b, -1)
+    flat_k = pages_k.reshape(-1, hkv, d)
+    flat_v = pages_v.reshape(-1, hkv, d)
+    k = flat_k[rows]           # [B, P*ps, Hkv, D]
+    v = flat_v[rows]
+    mask = view_ok             # [B, C, P*ps]
+    if ring_k is not None:
+        k = jnp.concatenate([k, ring_k], axis=1)
+        v = jnp.concatenate([v, ring_v], axis=1)
+        mask = jnp.concatenate(
+            [mask, jnp.broadcast_to(ring_ok[:, None, :],
+                                    (b, c, ring_ok.shape[1]))], axis=2)
+    if hkv != hq:
+        reps = hq // hkv
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    logits = jnp.einsum("bchd,bthd->bhct", q, k).astype(jnp.float32)
+    logits = logits * (d ** -0.5)
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhct,bthd->bchd", probs, v)
+
+
 def flash_decode_ref(
     q: jnp.ndarray,        # [B, Hq, D]
     k: jnp.ndarray,        # [B, T, Hkv, D]

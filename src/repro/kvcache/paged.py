@@ -36,7 +36,8 @@ universe, exactly the mixed write stream the paper's monitor sees.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import os
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -175,15 +176,56 @@ def view_rows(cache: PagedKV) -> jnp.ndarray:
     return rows.reshape(table.shape[0], -1).astype(jnp.int32)
 
 
+class StepPlan(NamedTuple):
+    """Page-table-derived read-path products, hoisted ONCE per segment.
+
+    The page table only changes host-side between scan segments (allocation
+    at admission, frees at retirement), so everything derived from it —
+    the logical->physical row map the reference gather uses, the clamped
+    block table the fused kernel's scalar prefetch walks, and the
+    page-allocated mask — is loop-invariant across a whole segment, not
+    just across layers. The scheduler builds one plan per segment and
+    threads it through every decode step.
+    """
+
+    view_ids: jnp.ndarray   # int32 [n_slots, V] physical row per logical row
+    blocks: jnp.ndarray     # int32 [n_slots, P] clamped physical block ids
+    allocated: jnp.ndarray  # bool [n_slots, V] page-allocated per logical row
+
+
+def kernel_blocks(cache: PagedKV) -> jnp.ndarray:
+    """int32 [n_slots, max_pages]: the fused kernel's scalar-prefetch
+    operand — physical block ids, clamped to 0 where unallocated. Clamped
+    entries walk block 0 and read the SAME garbage ``gather_view`` gathers
+    through the clamped :func:`view_rows`, and the view mask hides it in
+    both implementations, so fused and reference agree even on dead
+    slots."""
+    return jnp.maximum(cache["page_table"], 0).astype(jnp.int32)
+
+
+def step_plan(cache: PagedKV) -> StepPlan:
+    """Build the per-segment :class:`StepPlan` (see its docstring)."""
+    ps = cache["pages_k"].shape[2]
+    return StepPlan(
+        view_ids=view_rows(cache),
+        blocks=kernel_blocks(cache),
+        allocated=jnp.repeat(cache["page_table"] >= 0, ps, axis=1),
+    )
+
+
+def view_mask_from(allocated: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """:func:`view_mask` from a hoisted ``StepPlan.allocated``."""
+    logical = jnp.arange(allocated.shape[1])[None, :]
+    return (logical <= pos[:, None]) & allocated
+
+
 def view_mask(cache: PagedKV, pos: jnp.ndarray) -> jnp.ndarray:
     """bool [n_slots, V]: logical rows holding live KV once row ``pos``
     is written this step (linear addressing: rows 0..pos on allocated
     pages)."""
     ps = cache["pages_k"].shape[2]
-    v = view_len(cache)
-    logical = jnp.arange(v)[None, :]
     allocated = jnp.repeat(cache["page_table"] >= 0, ps, axis=1)
-    return (logical <= pos[:, None]) & allocated
+    return view_mask_from(allocated, pos)
 
 
 def gather_view(pages_l: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
@@ -267,6 +309,35 @@ def ring_commit(cache: PagedKV, pos: jnp.ndarray,
     return cache
 
 
+def overlay_step_parts(
+    cache: PagedKV,
+    vmask: jnp.ndarray,        # bool [n_slots, V] view validity after write
+    pos: jnp.ndarray,          # int32 [n_slots] this step's logical rows
+    unload_mask: jnp.ndarray,  # bool [n_slots] True = stage
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-step overlay bookkeeping, kept as SEPARATE sources.
+
+    Returns (view_ok [n_slots, V] pool-view validity with staged rows
+    shadowed out, ring_ok [n_slots, R] ring-lane validity including this
+    step's append, cur — the ring column this step appends to). The fused
+    kernel consumes the two masks directly (pool walk + ring lanes as a
+    second softmax source); the reference path concatenates them
+    (:func:`overlay_step`) — same booleans either way, so mask parity
+    between the implementations is by construction.
+    """
+    b, v = vmask.shape
+    r = cache["ring_pos"].shape[1]
+    cur = cache["ring_fill"]
+    ring_valid = ring_validity(cache) | (
+        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
+    )
+    shadowed = R.shadow_mask(
+        ring_validity(cache), cache["ring_pos"], v,
+        extra_rows=jnp.where(unload_mask, pos, v),
+    )
+    return vmask & ~shadowed, ring_valid, cur
+
+
 def overlay_step(
     cache: PagedKV,
     vmask: jnp.ndarray,        # bool [n_slots, V] view validity after write
@@ -280,17 +351,9 @@ def overlay_step(
     for a staged entry lives in the RING until drained, so its logical row
     is shadowed out of the view mask.
     """
-    b, v = vmask.shape
-    r = cache["ring_pos"].shape[1]
-    cur = cache["ring_fill"]
-    ring_valid = ring_validity(cache) | (
-        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
-    )
-    shadowed = R.shadow_mask(
-        ring_validity(cache), cache["ring_pos"], v,
-        extra_rows=jnp.where(unload_mask, pos, v),
-    )
-    full_mask = jnp.concatenate([vmask & ~shadowed, ring_valid], axis=1)
+    view_ok, ring_valid, cur = overlay_step_parts(cache, vmask, pos,
+                                                  unload_mask)
+    full_mask = jnp.concatenate([view_ok, ring_valid], axis=1)
     return full_mask, cur
 
 
@@ -304,8 +367,46 @@ def view_chunk_mask(cache: PagedKV, positions: jnp.ndarray) -> jnp.ndarray:
     visibility falls out of the same rule)."""
     ps = cache["pages_k"].shape[2]
     allocated = jnp.repeat(cache["page_table"] >= 0, ps, axis=1)
-    rows = jnp.arange(view_len(cache))[None, None, :]
+    return view_chunk_mask_from(allocated, positions)
+
+
+def view_chunk_mask_from(allocated: jnp.ndarray,
+                         positions: jnp.ndarray) -> jnp.ndarray:
+    """:func:`view_chunk_mask` from a hoisted ``StepPlan.allocated``."""
+    rows = jnp.arange(allocated.shape[1])[None, None, :]
     return (rows <= positions[:, :, None]) & allocated[:, None, :]
+
+
+def overlay_chunk_parts(
+    cache: PagedKV,
+    positions: jnp.ndarray,    # int32 [n_slots, C] per-query logical rows
+    unload_mask: jnp.ndarray,  # bool [n_slots] True = column-0 write stages
+    allocated: Optional[jnp.ndarray] = None,  # hoisted StepPlan.allocated
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked analogue of :func:`overlay_step_parts`.
+
+    Returns (view_ok [n_slots, C, V], ring_ok [n_slots, R] — per-lane, NOT
+    broadcast over C: a slot's pending ring entries always hold rows
+    strictly below its current position (conflict-forced drains), so ring
+    validity needs no per-query causal term — and cur, the ring column this
+    step appends to).
+    """
+    r = cache["ring_pos"].shape[1]
+    cur = cache["ring_fill"]
+    live = ring_validity(cache)
+    ring_valid = live | (
+        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
+    )
+    v = view_len(cache)
+    shadowed = R.shadow_mask(
+        live, cache["ring_pos"], v,
+        extra_rows=jnp.where(unload_mask, positions[:, 0], v),
+    )
+    if allocated is None:
+        vmask = view_chunk_mask(cache, positions)
+    else:
+        vmask = view_chunk_mask_from(allocated, positions)
+    return vmask & ~shadowed[:, None, :], ring_valid, cur
 
 
 def overlay_chunk(
@@ -319,37 +420,46 @@ def overlay_chunk(
     view ∪ ring, cur — the ring column this step appends to). Only the
     scattered column-0 (decode-phase) write may stage; prefill chunks are
     bulk/direct, and a prefilling slot's ring lane is empty (lanes drain at
-    every segment boundary, before the slot could have been admitted). A
-    slot's pending ring entries always hold rows strictly below its current
-    position (conflict-forced drains), so ring validity needs no per-query
-    causal term.
+    every segment boundary, before the slot could have been admitted).
     """
-    r = cache["ring_pos"].shape[1]
-    cur = cache["ring_fill"]
-    live = ring_validity(cache)
-    ring_valid = live | (
-        (jnp.arange(r)[None, :] == cur) & unload_mask[:, None]
-    )
-    v = view_len(cache)
-    shadowed = R.shadow_mask(
-        live, cache["ring_pos"], v,
-        extra_rows=jnp.where(unload_mask, positions[:, 0], v),
-    )
-    view_ok = view_chunk_mask(cache, positions) & ~shadowed[:, None, :]
+    view_ok, ring_valid, cur = overlay_chunk_parts(cache, positions,
+                                                   unload_mask)
     c = positions.shape[1]
+    r = ring_valid.shape[1]
     ring_ok = jnp.broadcast_to(ring_valid[:, None, :],
                                (positions.shape[0], c, r))
     return jnp.concatenate([view_ok, ring_ok], axis=2), cur
 
 
-def drain_ring(cache: PagedKV, use_kernel: bool = False) -> PagedKV:
+def _auto_drain_kernel() -> bool:
+    """Default kernel selection for :func:`drain_ring`.
+
+    The paged pool layout ALWAYS satisfies the ``staged_scatter``
+    preconditions (full-row entries, drain-unique destinations), so the
+    kernel is selected automatically wherever it is the fast path: any
+    non-CPU backend. On CPU the jnp oracle is the fast path, but setting
+    ``REPRO_DRAIN_KERNEL=1`` forces the kernel (interpret mode) so CI's
+    CPU serving jobs exercise the real drain kernel end to end;
+    ``REPRO_DRAIN_KERNEL=0`` forces the oracle everywhere.
+    """
+    env = os.environ.get("REPRO_DRAIN_KERNEL")
+    if env is not None:
+        return env not in ("", "0")
+    return jax.default_backend() != "cpu"
+
+
+def drain_ring(cache: PagedKV, use_kernel: Optional[bool] = None) -> PagedKV:
     """Bulk-copy all staged entries into the pool, empty the ring.
 
     Per layer, ALL slots' entries flatten into ONE entry list (``core.ring.
     merge_lanes``) and land with a single ``scatter_rows`` call — block
     ownership makes destinations unique across slots, conflict-forced
     drains make them unique within a slot (the ``staged_scatter``
-    precondition)."""
+    precondition). ``use_kernel=None`` (the default) selects the kernel
+    automatically (:func:`_auto_drain_kernel`) — callers no longer have to
+    opt in for serving to exercise the drain kernel."""
+    if use_kernel is None:
+        use_kernel = _auto_drain_kernel()
     l, b, r, h, dh = cache["ring_k"].shape
     n_phys = pool_rows(cache)
     # resolve logical -> physical per ring column, then flatten lanes
@@ -378,7 +488,7 @@ def drain_ring(cache: PagedKV, use_kernel: bool = False) -> PagedKV:
 
 def maybe_drain(
     cache: PagedKV,
-    use_kernel: bool = False,
+    use_kernel: Optional[bool] = None,
     incoming_pos: Optional[jnp.ndarray] = None,
 ) -> Tuple[PagedKV, jnp.ndarray]:
     """Fixed-shape conditional drain: ring full OR incoming logical rows

@@ -273,6 +273,29 @@ def attention(
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
 
 
+def project_q(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,          # [B, S, D]
+    positions: Optional[jnp.ndarray],  # [B, S] absolute query positions
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Query projection (+ bias + RoPE) for decode-time attention.
+
+    THE one q path shared by the jnp attention cores below and the fused
+    ``flash_decode_paged`` read kernel — both implementations consume
+    bit-identical queries, so fused-vs-reference parity reduces to the
+    attention core itself.
+    """
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+    if use_rope:
+        q = apply_rope(cfg, q, positions)
+    return q
+
+
 def decode_attention(
     cfg: ModelConfig,
     p: dict,
@@ -297,11 +320,7 @@ def decode_attention(
     """
     dims = attn_dims(cfg)
     dtype = x.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
-    if "bq" in p:
-        q = q + p["bq"].astype(dtype)
-    if use_rope:
-        q = apply_rope(cfg, q, pos[:, None])
+    q = project_q(cfg, p, x, pos[:, None], use_rope)
     k = repeat_kv(k_cache, dims.n_heads)
     v = repeat_kv(v_cache, dims.n_heads)
     mask = kv_len_mask[:, None, None, :]  # [B, 1, 1, S]
@@ -330,14 +349,44 @@ def masked_chunk_attention(
     """
     dims = attn_dims(cfg)
     dtype = x.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
-    if "bq" in p:
-        q = q + p["bq"].astype(dtype)
-    if use_rope:
-        q = apply_rope(cfg, q, positions)
+    q = project_q(cfg, p, x, positions, use_rope)
     k = repeat_kv(k_cache, dims.n_heads)
     v = repeat_kv(v_cache, dims.n_heads)
     out = sdpa(q, k, v, mask[:, None])  # [B, 1, C, T]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def fused_paged_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,          # [B, C, D] normed activations (C=1 for step)
+    positions: jnp.ndarray,  # [B, C] absolute query positions
+    pages_k: jnp.ndarray,    # [n_blocks, ps, Hkv, Dh] physical pool (layer)
+    pages_v: jnp.ndarray,
+    blocks: jnp.ndarray,     # int32 [B, P] clamped physical block ids
+    view_ok: jnp.ndarray,    # bool [B, C, P*ps]
+    ring_k: Optional[jnp.ndarray] = None,   # [B, R, Hkv, Dh] staging lanes
+    ring_v: Optional[jnp.ndarray] = None,
+    ring_ok: Optional[jnp.ndarray] = None,  # bool [B, R]
+    use_rope: bool = True,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Decode attention through the ``flash_decode_paged`` read kernel.
+
+    The fused twin of :func:`decode_attention` / :func:`masked_chunk_attention`
+    over a paged pool: the kernel walks the page table and overlays the
+    staging ring inside one softmax, so no gathered view is materialized.
+    Projections (``project_q``) and the output einsum are shared with the
+    jnp cores — fused and reference differ ONLY in the attention core,
+    which the kernel holds to ulp-level fp32 parity (identical greedy
+    tokens; DESIGN.md §7).
+    """
+    from ..kernels import flash_decode_paged
+
+    dtype = x.dtype
+    q = project_q(cfg, p, x, positions, use_rope)   # [B, C, Hq, Dh]
+    out = flash_decode_paged(q, pages_k, pages_v, blocks, view_ok,
+                             ring_k, ring_v, ring_ok, impl=impl)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
 
 

@@ -408,6 +408,8 @@ class DecoderLM:
         pos: jnp.ndarray,
         write_mask: jnp.ndarray,
         unload_mask: Optional[jnp.ndarray] = None,
+        attention: str = "reference",
+        plan: Optional[PG.StepPlan] = None,
     ) -> Tuple[jnp.ndarray, Params]:
         """One decode step against a PAGED KV pool (``repro.kvcache.paged``).
 
@@ -418,6 +420,19 @@ class DecoderLM:
         pool). ``unload_mask`` [B] routes live writes: True = stage into
         the ring overlay (unload path), False/None = direct scatter to the
         slot's physical row (offload path).
+
+        ``attention`` picks the read implementation (negotiate it through
+        ``core.paths.resolve_attention``): ``"reference"`` gathers the
+        per-slot view from the pool and concatenates the ring in jnp;
+        ``"fused"`` hands the physical pool, the scalar-prefetch block
+        table, and the ring planes to ``flash_decode_paged``, which walks
+        the page table and merges both sources inside one softmax — no
+        gathered view ever materializes. The two share one op order and
+        agree to fp32 ulp precision with identical greedy tokens (the
+        reference is the kernel's oracle; DESIGN.md §7 has the parity
+        contract). ``plan`` threads per-segment
+        hoisted page-table products (``PG.step_plan``); when None it is
+        derived here.
 
         The per-slot attention view is gathered from the pool through the
         page table each step — values are identical to the dense cache
@@ -431,19 +446,25 @@ class DecoderLM:
                 "paged KV decode covers linear-addressed dense caches; "
                 "SWA/VLM serve from dense lanes (DESIGN.md §Arch-applicability)"
             )
+        fused = attention == "fused"
         dtype = jnp.dtype(cfg.dtype)
         x = L.embed_tokens(cfg, params["embed"], tokens[:, None], dtype)
         ring = PG.has_ring(cache)
-        vmask = PG.view_mask(cache, pos)
-        view_ids = PG.view_rows(cache)
+        if plan is None:
+            plan = PG.step_plan(cache)
+        vmask = PG.view_mask_from(plan.allocated, pos)
+        view_ids = plan.view_ids
         if ring:
             if unload_mask is None:
                 unload_mask = jnp.ones_like(write_mask)
             unload_mask = unload_mask & write_mask
-            full_mask, cur = PG.overlay_step(cache, vmask, pos, unload_mask)
+            view_ok, ring_ok, cur = PG.overlay_step_parts(
+                cache, vmask, pos, unload_mask)
+            full_mask = jnp.concatenate([view_ok, ring_ok], axis=1)
             direct = write_mask & ~unload_mask
         else:
-            full_mask = vmask
+            view_ok = full_mask = vmask
+            ring_ok = None
             direct = write_mask
         # physical destination for the direct subset; sentinel (-1 logical
         # -> out-of-range physical) DROPS staged and dead slots
@@ -459,14 +480,22 @@ class DecoderLM:
             k_new, v_new = L.project_kv(cfg, p["attn"], hn, pos[:, None])
             pk = PG.scatter_token(pk, dest, k_new[:, 0])
             pv = PG.scatter_token(pv, dest, v_new[:, 0])
-            ak = PG.gather_view(pk, view_ids)
-            av = PG.gather_view(pv, view_ids)
             if ring:
                 rk = PG.stage_tile(rk, k_new[:, 0], cur)
                 rv = PG.stage_tile(rv, v_new[:, 0], cur)
-                ak = jnp.concatenate([ak, rk], axis=1)
-                av = jnp.concatenate([av, rv], axis=1)
-            a = L.decode_attention(cfg, p["attn"], hn, pos, ak, av, full_mask)
+            if fused:
+                a = L.fused_paged_attention(
+                    cfg, p["attn"], hn, pos[:, None], pk, pv,
+                    plan.blocks, view_ok[:, None, :],
+                    rk if ring else None, rv if ring else None, ring_ok)
+            else:
+                ak = PG.gather_view(pk, view_ids)
+                av = PG.gather_view(pv, view_ids)
+                if ring:
+                    ak = jnp.concatenate([ak, rk], axis=1)
+                    av = jnp.concatenate([av, rv], axis=1)
+                a = L.decode_attention(cfg, p["attn"], hn, pos, ak, av,
+                                       full_mask)
             h = h + a
             h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
             if ring:
@@ -504,6 +533,8 @@ class DecoderLM:
         n_valid: jnp.ndarray,     # int32 [B] live columns (chunk len | 1 | 0)
         write_mask: jnp.ndarray,  # bool [B] gates every KV write
         unload_mask: Optional[jnp.ndarray] = None,
+        attention: str = "reference",
+        plan: Optional[PG.StepPlan] = None,
     ) -> Tuple[jnp.ndarray, Params]:
         """One MIXED-PHASE step against the paged pool: each slot processes
         a [C]-token slab — a prefill chunk (``n_valid`` prompt tokens from
@@ -528,24 +559,35 @@ class DecoderLM:
                 "paged KV decode covers linear-addressed dense caches; "
                 "SWA/VLM serve from dense lanes (DESIGN.md §Arch-applicability)"
             )
+        fused = attention == "fused"
         dtype = jnp.dtype(cfg.dtype)
         b, c = tokens.shape
         x = L.embed_tokens(cfg, params["embed"], tokens, dtype)
         positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
         wvalid = (jnp.arange(c)[None, :] < n_valid[:, None]) & write_mask[:, None]
         ring = PG.has_ring(cache)
+        if plan is None:
+            plan = PG.step_plan(cache)
         if ring:
             if unload_mask is None:
                 unload_mask = jnp.zeros((b,), jnp.bool_)
             unload_mask = unload_mask & wvalid[:, 0]
-            full_mask, cur = PG.overlay_chunk(cache, positions, unload_mask)
+            view_ok, ring_lane_ok, cur = PG.overlay_chunk_parts(
+                cache, positions, unload_mask, allocated=plan.allocated)
+            r = ring_lane_ok.shape[1]
+            full_mask = jnp.concatenate(
+                [view_ok,
+                 jnp.broadcast_to(ring_lane_ok[:, None, :], (b, c, r))],
+                axis=2)
             direct = wvalid & ~unload_mask[:, None]
         else:
-            full_mask = PG.view_chunk_mask(cache, positions)
+            view_ok = full_mask = PG.view_chunk_mask_from(plan.allocated,
+                                                          positions)
+            ring_lane_ok = None
             direct = wvalid
         dest = PG.logical_to_physical_many(
             cache, jnp.where(direct, positions, -1))
-        view_ids = PG.view_rows(cache)
+        view_ids = plan.view_ids
 
         def self_body(carry, xs):
             h = carry
@@ -557,15 +599,22 @@ class DecoderLM:
             k_new, v_new = L.project_kv(cfg, p["attn"], hn, positions)
             pk = PG.scatter_chunk(pk, dest, k_new)
             pv = PG.scatter_chunk(pv, dest, v_new)
-            ak = PG.gather_view(pk, view_ids)
-            av = PG.gather_view(pv, view_ids)
             if ring:
                 rk = PG.stage_tile(rk, k_new[:, 0], cur)
                 rv = PG.stage_tile(rv, v_new[:, 0], cur)
-                ak = jnp.concatenate([ak, rk], axis=1)
-                av = jnp.concatenate([av, rv], axis=1)
-            a = L.masked_chunk_attention(
-                cfg, p["attn"], hn, positions, ak, av, full_mask)
+            if fused:
+                a = L.fused_paged_attention(
+                    cfg, p["attn"], hn, positions, pk, pv,
+                    plan.blocks, view_ok,
+                    rk if ring else None, rv if ring else None, ring_lane_ok)
+            else:
+                ak = PG.gather_view(pk, view_ids)
+                av = PG.gather_view(pv, view_ids)
+                if ring:
+                    ak = jnp.concatenate([ak, rk], axis=1)
+                    av = jnp.concatenate([av, rv], axis=1)
+                a = L.masked_chunk_attention(
+                    cfg, p["attn"], hn, positions, ak, av, full_mask)
             h = h + a
             h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
             if ring:

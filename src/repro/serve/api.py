@@ -64,6 +64,13 @@ class EngineConfig:
     applies to requests submitted without ``SamplingParams``, and its
     temperature also backfills requests whose own temperature is left
     ``None`` (see ``repro.models.sampling.resolve``).
+
+    ``attention`` picks the paged decode read implementation —
+    ``"fused"`` (the ``flash_decode_paged`` kernel), ``"reference"``
+    (the jnp oracle), or ``"auto"`` (fused wherever the kernel compiles
+    natively; negotiated through ``core.paths.resolve_attention``).
+    ``drain_kernel=None`` auto-selects the ``staged_scatter`` drain
+    kernel the same way.
     """
 
     max_seq: int
@@ -83,7 +90,8 @@ class EngineConfig:
     n_blocks: int = 0
     ring_size: int = 8
     hot_threshold: int = 4
-    drain_kernel: bool = False
+    drain_kernel: Optional[bool] = None
+    attention: str = "auto"           # auto | fused | reference
     # sampling
     default_params: Optional[SamplingParams] = None
     eos_id: Optional[int] = None
@@ -103,6 +111,7 @@ class EngineConfig:
                     or d.temperature == 0.0),
             eos_id=self.eos_id,
             drain_kernel=self.drain_kernel,
+            attention=self.attention,
             kv_layout=self.kv_layout,
             sample_seed=self.sample_seed,
             chunked=self.chunked,

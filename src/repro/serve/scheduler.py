@@ -70,7 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..core.paths import build_decision
+from ..core.paths import build_decision, resolve_attention
 from ..core.types import PHASE_BULK, PHASE_SCATTERED, make_write_batch
 from ..data.pipeline import RequestQueue
 from ..kvcache import paged as PG
@@ -171,6 +171,15 @@ class BatchConfig:
     for requests that carry none; ``greedy`` is the legacy temperature
     default (0.0 when True, 1.0 when False) for params that leave
     ``temperature`` unset.
+
+    ``attention`` picks the paged read implementation: ``"fused"`` (the
+    ``flash_decode_paged`` kernel: page-table walk + ring overlay + SDPA
+    in one pass), ``"reference"`` (jnp gather + concat — the kernel's
+    parity oracle), or ``"auto"`` (negotiated through
+    ``core.paths.resolve_attention``: fused wherever the kernel compiles
+    natively, reference on CPU). ``drain_kernel=None`` likewise
+    auto-selects the ``staged_scatter`` drain kernel (on by default
+    off-CPU; ``REPRO_DRAIN_KERNEL`` overrides).
     """
 
     max_seq: int
@@ -183,7 +192,8 @@ class BatchConfig:
     hot_threshold: int = 4
     greedy: bool = True
     eos_id: Optional[int] = None
-    drain_kernel: bool = False
+    drain_kernel: Optional[bool] = None
+    attention: str = "auto"      # auto | fused | reference
     kv_layout: str = "auto"      # auto | paged | lanes
     sample_seed: int = 0
     chunked: bool = False
@@ -239,6 +249,11 @@ class BatchedServeEngine:
             chunked=cfg.chunked)
         self.uses_ring = self.path.uses_ring
         self.mon_state = self.decision.init_state()
+        # negotiated read-side implementation (fused kernel vs jnp
+        # reference), resolved ONCE like the write path above
+        self.attention = resolve_attention(
+            cfg.attention, layout=layout,
+            arch_paged_capable=paged_capable(model))
 
         if layout == "paged":
             shape = jax.eval_shape(lambda: model.init_cache(1, cfg.max_seq))
@@ -329,8 +344,9 @@ class BatchedServeEngine:
         ring = paged and self.uses_ring
         ps, nb, mp = cfg.page_size, self.n_blocks, self.max_pages
         decision = self.decision
+        attn = self.attention
 
-        def step(params, enabled, carry, _):
+        def step(params, enabled, plan, carry, _):
             cache, st, mon, stats, swrites = carry
             active = ~st.done & enabled
             if paged:
@@ -350,10 +366,11 @@ class BatchedServeEngine:
                     incoming_pos=jnp.where(active, st.pos, -1))
                 logits, cache = model.decode_step_paged(
                     params, cache, st.token, st.pos, active,
-                    unload_mask=unload)
+                    unload_mask=unload, attention=attn, plan=plan)
             elif paged:
                 logits, cache = model.decode_step_paged(
-                    params, cache, st.token, st.pos, active)
+                    params, cache, st.token, st.pos, active,
+                    attention=attn, plan=plan)
             else:
                 # retired slots never write: redirect their scatter rows
                 # to the out-of-range drop sentinel (SSM recurrent state
@@ -395,10 +412,14 @@ class BatchedServeEngine:
             return (cache, st, mon, stats, swrites), (emit, active)
 
         def run(params, cache, st, mon, enabled):
+            # page-table products are segment-invariant (allocation is
+            # host-side, between segments): derive them ONCE here, outside
+            # the scan, instead of once per step per layer
+            plan = PG.step_plan(cache) if paged else None
             stats0 = jnp.zeros((4,), jnp.int32)
             sw0 = jnp.zeros((cfg.n_slots, 3), jnp.int32)
             (cache, st, mon, stats, swrites), (emits, acts) = lax.scan(
-                lambda c, x: step(params, enabled, c, x),
+                lambda c, x: step(params, enabled, plan, c, x),
                 (cache, st, mon, stats0, sw0),
                 None,
                 length=cfg.segment_len,
@@ -425,8 +446,9 @@ class BatchedServeEngine:
         ring = self.uses_ring
         ps, nb, c = cfg.page_size, self.n_blocks, cfg.chunk_size
         decision = self.decision
+        attn = self.attention
 
-        def step(params, prompts, enabled, carry, _):
+        def step(params, prompts, enabled, plan, carry, _):
             cache, st, mon, stats, swrites = carry
             active = ~st.done & enabled
             is_pf = active & (st.phase == PHASE_PREFILL)
@@ -466,10 +488,11 @@ class BatchedServeEngine:
                     incoming_pos=jnp.where(active & ~is_pf, st.pos, -1))
                 logits, cache = model.decode_chunk_paged(
                     params, cache, tokens, st.pos, n_valid, active,
-                    unload_mask=unload)
+                    unload_mask=unload, attention=attn, plan=plan)
             else:
                 logits, cache = model.decode_chunk_paged(
-                    params, cache, tokens, st.pos, n_valid, active)
+                    params, cache, tokens, st.pos, n_valid, active,
+                    attention=attn, plan=plan)
             finishing = is_pf & (st.pos + n_valid >= st.plen)
             emitting = (active & ~is_pf) | finishing
             # the first token after the prompt is the prefill ARGMAX in
@@ -505,10 +528,12 @@ class BatchedServeEngine:
             return (cache, st, mon, stats, swrites), (emit, emitting)
 
         def run(params, cache, st, mon, prompts, enabled):
+            # per-segment hoist of page-table products (see _build_segment)
+            plan = PG.step_plan(cache)
             stats0 = jnp.zeros((4,), jnp.int32)
             sw0 = jnp.zeros((cfg.n_slots, 3), jnp.int32)
             (cache, st, mon, stats, swrites), (emits, ems) = lax.scan(
-                lambda cry, x: step(params, prompts, enabled, cry, x),
+                lambda cry, x: step(params, prompts, enabled, plan, cry, x),
                 (cache, st, mon, stats0, sw0),
                 None,
                 length=cfg.segment_len,
